@@ -1,0 +1,105 @@
+"""Shared benchmark machinery: dataset prep, training runs, CSV emission.
+
+Every benchmark mirrors one table/figure of the paper (see benchmarks/run.py
+for the index). Results are printed as CSV and dumped to results/bench/."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Sequence
+
+import numpy as np
+
+import jax
+
+from repro.graph import datasets
+from repro.graph.events import EventStream
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.train import loop
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
+
+VARIANTS = ("tgn", "jodie", "apan")
+
+
+def bench_stream(n_events: int = 6000, seed: int = 0):
+    """Scaled-down WIKI-like stream (the paper's primary dataset)."""
+    spec = datasets.SyntheticSpec("wiki-bench", 400, 120, n_events, 8)
+    return datasets.generate(spec, seed), spec
+
+
+@dataclasses.dataclass
+class RunResult:
+    aps: list          # per-epoch AP
+    losses: list
+    epoch_seconds: list
+    compile_seconds: float
+    per_batch_aps: list
+
+
+def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
+              batch_size=100, epochs=3, seed=0, beta=0.1,
+              pres_scale="count", delta_mode="transition",
+              use_smoothing=None, collect_per_batch=False,
+              d_mem=32) -> RunResult:
+    cfg = MDGNNConfig(
+        variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
+        d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
+        use_pres=use_pres, use_smoothing=use_smoothing, beta=beta,
+        pres_scale=pres_scale, delta_mode=delta_mode)
+    key = jax.random.PRNGKey(seed)
+    params, _ = mdgnn.init_params(key, cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    opt_state = opt.init(params)
+    batches = stream.temporal_batches(batch_size)
+    step = loop.make_train_step(cfg, opt)
+    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+
+    # compile (first step) timed separately so epoch_seconds is steady-state
+    t0 = time.perf_counter()
+    from repro.graph.negatives import sample_negatives
+    neg = sample_negatives(key, batches[1], *dst_range)
+    step(params, opt_state, state, batches[0], batches[1], neg)
+    compile_s = time.perf_counter() - t0
+
+    aps, losses, secs, per_batch = [], [], [], []
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, res = loop.run_epoch(
+            params, opt_state, state, batches, cfg, step, sub, dst_range,
+            collect_logits=collect_per_batch)
+        aps.append(res.ap)
+        losses.append(res.loss)
+        secs.append(res.seconds)
+        if collect_per_batch:
+            per_batch.extend(res.aps)
+    return RunResult(aps, losses, secs, compile_s, per_batch)
+
+
+def emit(name: str, rows: Sequence[dict]):
+    """Print CSV to stdout and persist JSON to results/bench/<name>.json."""
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(list(rows), indent=2))
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"\n# --- {name} ---")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def mean_std(xs):
+    a = np.asarray(xs, np.float64)
+    return float(a.mean()), float(a.std())

@@ -1,0 +1,40 @@
+"""Fig. 17 ablation: TGN | TGN-PRES-S (memory smoothing only) |
+TGN-PRES-V (prediction-correction only) | TGN-PRES (both), plus the
+paper-literal "time" extrapolation vs our "count" adaptation (DESIGN.md)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+CONFIGS = [
+    # name, use_pres, use_smoothing, beta, pres_scale
+    ("TGN",            False, False, 0.0, "count"),
+    ("TGN-PRES-S",     False, True,  0.1, "count"),   # smoothing only
+    ("TGN-PRES-V",     True,  False, 0.0, "count"),   # filter only
+    ("TGN-PRES",       True,  True,  0.1, "count"),   # full (our default)
+    ("TGN-PRES-time",  True,  True,  0.1, "time"),    # paper-literal Eq. 7
+]
+
+
+def run(fast: bool = False, seeds: int = 2):
+    stream, spec = common.bench_stream(3000 if fast else 6000)
+    b = 400
+    epochs = 2 if fast else 4
+    if fast:
+        seeds = 1
+    rows = []
+    for name, pres, smooth, beta, scale in CONFIGS:
+        finals, firsts = [], []
+        for s in range(seeds):
+            r = common.train_run(stream, spec, variant="tgn", use_pres=pres,
+                                 use_smoothing=smooth, beta=beta,
+                                 pres_scale=scale, batch_size=b,
+                                 epochs=epochs, seed=s)
+            finals.append(r.aps[-1])
+            firsts.append(r.aps[0])
+        m_f, sd_f = common.mean_std(finals)
+        m_0, _ = common.mean_std(firsts)
+        rows.append({"config": name, "batch_size": b,
+                     "ap_first_epoch": m_0, "ap_final": m_f,
+                     "ap_final_std": sd_f})
+    common.emit("fig17_ablation", rows)
+    return rows

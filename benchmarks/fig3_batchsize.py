@@ -1,0 +1,25 @@
+"""Fig. 3: performance of the baselines across temporal batch sizes —
+including the SMALL-batch regime where Theorem 1 predicts high epoch-gradient
+variance (and hence poor convergence)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(fast: bool = False, seeds: int = 2):
+    stream, spec = common.bench_stream(3000 if fast else 6000)
+    sizes = [10, 25, 50, 100, 200, 400, 800]
+    if fast:
+        sizes = [10, 100, 400]
+        seeds = 1
+    rows = []
+    for variant in common.VARIANTS:
+        for b in sizes:
+            aps = [common.train_run(stream, spec, variant=variant,
+                                    batch_size=b, epochs=2, seed=s).aps[-1]
+                   for s in range(seeds)]
+            m, sd = common.mean_std(aps)
+            rows.append({"model": variant, "batch_size": b,
+                         "ap_mean": m, "ap_std": sd})
+    common.emit("fig3_batchsize", rows)
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 4 / Figs. 10-13: baselines with and without PRES across temporal
+batch sizes (the degradation-mitigation picture), beta = 0.1."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(fast: bool = False, seeds: int = 2):
+    stream, spec = common.bench_stream(3000 if fast else 6000)
+    sizes = [100, 200, 400, 800]
+    if fast:
+        sizes = [100, 400]
+        seeds = 1
+    rows = []
+    for variant in common.VARIANTS:
+        for b in sizes:
+            for pres in (False, True):
+                aps = [common.train_run(stream, spec, variant=variant,
+                                        use_pres=pres, batch_size=b,
+                                        epochs=2, seed=s).aps[-1]
+                       for s in range(seeds)]
+                m, sd = common.mean_std(aps)
+                rows.append({"model": variant, "pres": pres, "batch_size": b,
+                             "ap_mean": m, "ap_std": sd})
+    common.emit("fig4_pres_vs_std", rows)
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 5 / Fig. 14: statistical efficiency — per-iteration AP with and
+without PRES at a large temporal batch (beta = 0.1)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(fast: bool = False, seeds: int = 1):
+    stream, spec = common.bench_stream(3000 if fast else 6000)
+    b = 400
+    epochs = 2 if fast else 3
+    rows = []
+    for variant in (("tgn",) if fast else common.VARIANTS):
+        for pres in (False, True):
+            r = common.train_run(stream, spec, variant=variant, use_pres=pres,
+                                 batch_size=b, epochs=epochs,
+                                 collect_per_batch=True)
+            # smooth per-batch APs into a handful of checkpoints
+            n = len(r.per_batch_aps)
+            k = max(n // 10, 1)
+            for i in range(0, n, k):
+                window = r.per_batch_aps[i:i + k]
+                rows.append({"model": variant, "pres": pres, "iteration": i,
+                             "ap": sum(window) / len(window)})
+    common.emit("fig5_efficiency", rows)
+    return rows

@@ -1,0 +1,105 @@
+"""Kernel microbenchmarks: wall-time of the jitted pure-jnp oracle (the XLA
+baseline the Pallas kernels replace) at production-ish shapes, plus kernel
+interpret-mode validation deltas. On TPU the Pallas path is the timed one;
+in this CPU container interpret-mode timings are NOT meaningful, so we time
+the oracle and report the kernel's max|err| against it instead."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(fast: bool = False, seeds: int = 1):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # gru_cell: a large temporal batch of touched nodes
+    m, d = (2048, 128) if fast else (8192, 128)
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32)
+    b = jnp.zeros((3 * d,), jnp.float32)
+    oracle = jax.jit(ref.gru_cell_ref)
+    us = _time(oracle, x, h, w, u, b)
+    err = float(jnp.abs(ops.gru_cell(x, h, w, u, b, interpret=True)
+                        - oracle(x, h, w, u, b)).max())
+    rows.append({"kernel": "gru_cell", "shape": f"({m},{d})",
+                 "oracle_us": us, "kernel_max_err": err})
+
+    # pres_filter
+    s_prev = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    s_meas = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    dm = jnp.asarray(rng.normal(size=(m, d)) * 0.01, jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(m,)), jnp.float32))
+    gamma = jnp.asarray(0.5)
+    oracle = jax.jit(ref.pres_filter_ref)
+    us = _time(oracle, s_prev, s_meas, dm, dt, gamma)
+    k = ops.pres_filter(s_prev, s_meas, dm, dt, gamma, interpret=True)
+    r = oracle(s_prev, s_meas, dm, dt, gamma)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(k, r))
+    rows.append({"kernel": "pres_filter", "shape": f"({m},{d})",
+                 "oracle_us": us, "kernel_max_err": err})
+
+    # neighbor_attn
+    mm, kk, e = (1024, 16, 128) if fast else (4096, 16, 128)
+    q = jnp.asarray(rng.normal(size=(mm, e)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(mm, kk, e)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(mm, kk, e)), jnp.float32)
+    valid = jnp.asarray(rng.random((mm, kk)) > 0.3)
+    oracle = jax.jit(ref.neighbor_attn_ref)
+    us = _time(oracle, q, kv, v, valid)
+    err = float(jnp.abs(ops.neighbor_attn(q, kv, v, valid, interpret=True)
+                        - oracle(q, kv, v, valid)).max())
+    rows.append({"kernel": "neighbor_attn", "shape": f"({mm},{kk},{e})",
+                 "oracle_us": us, "kernel_max_err": err})
+
+    # ssd_chunk
+    g, l, n, p = (8, 128, 64, 64) if fast else (32, 256, 128, 128)
+    q = jnp.asarray(rng.normal(size=(g, l, n)) * 0.1, jnp.float32)
+    kq = jnp.asarray(rng.normal(size=(g, l, n)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(g, l, p)) * 0.1, jnp.float32)
+    lcum = jnp.cumsum(jnp.asarray(-np.abs(rng.normal(size=(g, l)) * 0.05),
+                                  jnp.float32), -1)
+    h0 = jnp.asarray(rng.normal(size=(g, n, p)) * 0.1, jnp.float32)
+    oracle = jax.jit(jax.vmap(ref.ssd_chunk_ref))
+    us = _time(oracle, q, kq, v, lcum, h0)
+    yk, hk = ops.ssd_chunk(q, kq, v, lcum, h0, interpret=True)
+    yr, hr = oracle(q, kq, v, lcum, h0)
+    err = max(float(jnp.abs(yk - yr).max()), float(jnp.abs(hk - hr).max()))
+    rows.append({"kernel": "ssd_chunk", "shape": f"({g},{l},{n},{p})",
+                 "oracle_us": us, "kernel_max_err": err})
+
+    # flash_attn
+    from repro.kernels import flash_attn as FA
+    g, s, d = (4, 512, 64) if fast else (8, 1024, 128)
+    q = jnp.asarray(rng.normal(size=(g, s, d)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(g, s, d)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(g, s, d)) * 0.3, jnp.float32)
+    oracle = jax.jit(FA.flash_attn_ref)
+    us = _time(oracle, q, k, v)
+    err = float(jnp.abs(ops.flash_attn(q, k, v, q_block=128, kv_block=128,
+                                       interpret=True)
+                        - oracle(q, k, v)).max())
+    rows.append({"kernel": "flash_attn", "shape": f"({g},{s},{d})",
+                 "oracle_us": us, "kernel_max_err": err})
+
+    common.emit("kernels_micro", rows)
+    return rows

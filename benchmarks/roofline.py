@@ -1,0 +1,92 @@
+"""§Roofline: consolidate the dry-run JSONs into the roofline table —
+compute/memory/collective terms (seconds), dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio, per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+# One-line "what moves the dominant term down" per (bottleneck, shape kind).
+LEVERS = {
+    ("collective", "train"): "overlap grad all-reduce with bwd; bf16 "
+        "activation ARs; sequence-sharding between blocks",
+    ("collective", "prefill"): "weight-stationary scheduling / bigger "
+        "per-chip batch to amortize weight+expert traffic",
+    ("collective", "decode"): "multi-token (speculative) decode or weight "
+        "caching — 1 token cannot amortize gathers",
+    ("memory", "train"): "more aggressive remat policy; fuse "
+        "norm+matmul epilogues; bf16 master-weight reads",
+    ("memory", "prefill"): "larger attention chunks (more reuse per HBM "
+        "read); fuse QKV projections",
+    ("memory", "decode"): "quantize KV cache (int8); batch more sequences "
+        "per chip",
+    ("compute", "train"): "already compute-bound — raise MFU via larger "
+        "matmul tiles / fewer remat recomputes",
+    ("compute", "prefill"): "already compute-bound — good",
+    ("compute", "decode"): "already compute-bound — good",
+}
+
+
+def _kind(shape_name: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill"}.get(
+        shape_name, "decode")
+
+
+def load_all(tag: str | None = None):
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        stem = p.stem
+        has_tag = "-" in stem.split("__")[-1]
+        if tag is None and has_tag:
+            continue
+        if tag is not None and not stem.endswith(f"-{tag}"):
+            continue
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def run(fast: bool = False, seeds: int = 1):
+    rows = []
+    for d in load_all():
+        def _stub(status):
+            return {"arch": d["arch"], "shape": d["shape"],
+                    "mesh": d["mesh"], "compute_s": "",
+                    "compute_hlo_s": "", "memory_s": "",
+                    "collective_s": "", "bottleneck": status,
+                    "useful_flops_ratio": "", "hbm_bytes_per_device": "",
+                    "lever": ""}
+
+        if d.get("status") == "skipped":
+            rows.append(_stub("skipped"))
+            continue
+        if d.get("status") != "ok":
+            rows.append(_stub("ERROR"))
+            continue
+        mem = d.get("memory_analysis", {})
+        hbm = (mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)
+        # analytic compute floor: XLA cost_analysis counts while-loop bodies
+        # once, so scanned layer stacks under-report flops by ~n_layers;
+        # MODEL_FLOPS/chips/peak corrects the compute term.
+        import repro.launch.mesh as mesh_lib
+        c_model = (d.get("model_flops_global", 0.0) / d["chips"]
+                   / mesh_lib.PEAK_FLOPS_BF16)
+        c = max(d["compute_s"], c_model)
+        terms = {"compute": c, "memory": d["memory_s"],
+                 "collective": d["collective_s"]}
+        bt = max(terms, key=terms.get)
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": c, "compute_hlo_s": d["compute_s"],
+            "memory_s": d["memory_s"],
+            "collective_s": d["collective_s"],
+            "bottleneck": bt,
+            "useful_flops_ratio": d.get("useful_flops_ratio") or "",
+            "hbm_bytes_per_device": hbm,
+            "lever": LEVERS.get((bt, _kind(d["shape"])), ""),
+        })
+    common.emit("roofline", rows)
+    return rows

@@ -1,0 +1,69 @@
+"""Benchmark harness — one entry per paper table/figure plus the roofline
+consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
+
+  fig3_batchsize   Fig. 3      AP vs temporal batch size (small-batch regime)
+  fig4_pres_vs_std Fig. 4      AP vs batch size with/without PRES
+  table1_speedup   Table 1     epoch time + speed-up, base vs 4x-batch PRES
+  table2_nodecls   Table 2     node classification ROC-AUC w/wo PRES
+  fig5_efficiency  Fig. 5      statistical efficiency (per-iteration AP)
+  thm1_variance    Theorem 1   epoch-gradient variance vs batch size
+  fig16_extended   Fig. 16     extended training closes small AP gaps
+  fig17_ablation   Fig. 17     PRES-S / PRES-V / full / paper-literal scale
+  buckets_ablation Sec. 5.3    AP vs anchor-bucket count (tracker squeeze)
+  kernels_micro    (kernels)   oracle timings + kernel validation deltas
+  roofline         §Roofline   dry-run roofline table consolidation
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only name[,name]] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = [
+    "fig3_batchsize",
+    "fig4_pres_vs_std",
+    "table1_speedup",
+    "table2_nodecls",
+    "fig5_efficiency",
+    "thm1_variance",
+    "fig16_extended",
+    "fig17_ablation",
+    "buckets_ablation",
+    "kernels_micro",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes/epochs/seeds")
+    ap.add_argument("--seeds", type=int, default=None)
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else BENCHES
+    failures = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            kw = {"fast": args.fast}
+            if args.seeds is not None:
+                kw["seeds"] = args.seeds
+            mod.run(**kw)
+            print(f"[{name}] done in {time.perf_counter() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table 1: training-efficiency improvement — baseline batch size vs 4x
+batch with PRES. Reports epoch wall-time, the speed-up factor, and final AP
+for each MDGNN variant. (CPU wall-times: the RATIO is the deliverable.)"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(fast: bool = False, seeds: int = 1):
+    stream, spec = common.bench_stream(3000 if fast else 6000)
+    base_b, big_b = 100, 400
+    epochs = 2 if fast else 3
+    rows = []
+    for variant in common.VARIANTS:
+        base = common.train_run(stream, spec, variant=variant, use_pres=False,
+                                batch_size=base_b, epochs=epochs)
+        pres = common.train_run(stream, spec, variant=variant, use_pres=True,
+                                batch_size=big_b, epochs=epochs)
+        t_base = sum(base.epoch_seconds) / len(base.epoch_seconds)
+        t_pres = sum(pres.epoch_seconds) / len(pres.epoch_seconds)
+        rows.append({
+            "model": variant,
+            "base_batch": base_b, "pres_batch": big_b,
+            "base_epoch_s": t_base, "pres_epoch_s": t_pres,
+            "speedup": t_base / t_pres,
+            "base_ap": base.aps[-1], "pres_ap": pres.aps[-1],
+            "ap_delta": pres.aps[-1] - base.aps[-1],
+        })
+    common.emit("table1_speedup", rows)
+    return rows

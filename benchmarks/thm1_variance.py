@@ -1,0 +1,82 @@
+"""Theorem 1 probe: empirical epoch-gradient variance (over negative-sampling
+draws) as a function of the temporal batch size, plus the controlled i.i.d.
+simulation that isolates the |E| sigma^2 / b^2 law."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import theory
+from repro.graph.negatives import sample_negatives
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+
+
+def _mdgnn_epoch_grad(stream, spec, cfg, params, batch_size, seed):
+    batches = stream.temporal_batches(batch_size)
+    state = mdgnn.init_state(cfg)
+    key = jax.random.PRNGKey(seed)
+    dst = (spec.n_users, spec.n_users + spec.n_items)
+    total = None
+
+    def loss(p, state, prev, pos, neg):
+        mem2, _ = mdgnn.memory_update(p, cfg, state["memory"], prev)
+        st = dict(state, memory=mem2)
+        hs = mdgnn.embed_nodes(p, cfg, st, pos.src, pos.t)
+        hd = mdgnn.embed_nodes(p, cfg, st, pos.dst, pos.t)
+        hns = mdgnn.embed_nodes(p, cfg, st, neg.src, neg.t)
+        hn = mdgnn.embed_nodes(p, cfg, st, neg.dst, neg.t)
+        lp = mdgnn.link_logits(p, hs, hd)
+        ln = mdgnn.link_logits(p, hns, hn)
+        bce = (jnp.sum(jax.nn.softplus(-lp) * pos.mask)
+               + jnp.sum(jax.nn.softplus(ln) * neg.mask))
+        denom = jnp.maximum(jnp.sum(pos.mask) + jnp.sum(neg.mask), 1.0)
+        return bce / denom, st
+
+    grad_fn = jax.jit(jax.grad(loss, has_aux=True))
+    for i in range(1, len(batches)):
+        key, sub = jax.random.split(key)
+        neg = sample_negatives(sub, batches[i], *dst)
+        g, state = grad_fn(params, state, batches[i - 1], batches[i], neg)
+        total = g if total is None else jax.tree.map(jnp.add, total, g)
+    return total
+
+
+def run(fast: bool = False, seeds: int = 8):
+    rows = []
+
+    # -- controlled i.i.d. simulation (exact law) ---------------------------
+    rng = np.random.default_rng(0)
+    n_events, d, sigma = 2048, 16, 0.5
+    g_true = rng.normal(size=(n_events, d))
+    for b in (16, 64, 256, 1024):
+        draws = []
+        for s in range(32):
+            r = np.random.default_rng(s + 1)
+            noisy = g_true + r.normal(0, sigma, size=(n_events, d))
+            draws.append({"g": jnp.asarray(
+                noisy.reshape(n_events // b, b, d).mean(1).sum(0))})
+        var = theory.gradient_variance(draws)
+        rows.append({"probe": "iid_sim", "batch_size": b, "variance": var,
+                     "thm1_lower_bound": theory.theorem1_lower_bound(
+                         n_events, b, sigma ** 2 / b) * d})
+
+    # -- full MDGNN (heteroscedastic; trend reported) ------------------------
+    stream, spec = common.bench_stream(1500 if fast else 3000)
+    cfg = MDGNNConfig(variant="jodie", n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=16, d_msg=16, d_time=8,
+                      d_embed=16)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    if fast:
+        seeds = 4
+    for b in (50, 150, 500):
+        grads = [_mdgnn_epoch_grad(stream, spec, cfg, params, b, s)
+                 for s in range(seeds)]
+        rows.append({"probe": "mdgnn", "batch_size": b,
+                     "variance": theory.gradient_variance(grads),
+                     "thm1_lower_bound": float("nan")})
+    common.emit("thm1_variance", rows)
+    return rows

@@ -1,0 +1,51 @@
+"""Quickstart: train a TGN with PRES on a synthetic WIKI-like stream in ~a
+minute on CPU, evaluate on the chronological validation split.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.graph import datasets
+from repro.models.mdgnn import MDGNNConfig, init_params, init_state
+from repro.optim import adamw
+from repro.train import loop
+
+
+def main():
+    # 1. data: a scaled-down cousin of the paper's WIKI dataset
+    spec = datasets.SyntheticSpec("quickstart", 200, 80, 4000, 8)
+    stream = datasets.generate(spec, seed=0)
+    train_s, val_s, _ = stream.chronological_split()
+    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+
+    # 2. model: TGN encoder (GRU memory + temporal attention) with PRES
+    cfg = MDGNNConfig(
+        variant="tgn", n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
+        d_mem=64, d_msg=64, d_time=32, d_embed=64, n_neighbors=10,
+        use_pres=True,     # prediction-correction filter (paper Sec. 5.1)
+        beta=0.1,          # memory-coherence smoothing weight (Eq. 10)
+    )
+    key = jax.random.PRNGKey(0)
+    params, _ = init_params(key, cfg)
+    state = init_state(cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    # 3. temporal batches + lag-one training (Alg. 2)
+    batches = train_s.temporal_batches(400)   # large temporal batch via PRES
+    step = loop.make_train_step(cfg, opt)
+    eval_step = loop.make_eval_step(cfg)
+    for epoch in range(4):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, res = loop.run_epoch(
+            params, opt_state, state, batches, cfg, step, sub, dst_range)
+        key, sub = jax.random.split(key)
+        _, vap, vauc = loop.evaluate(params, state,
+                                     val_s.temporal_batches(400), cfg,
+                                     eval_step, sub, dst_range)
+        print(f"epoch {epoch}: loss={res.loss:.4f} train_ap={res.ap:.4f} "
+              f"val_ap={vap:.4f} val_auc={vauc:.4f} ({res.seconds:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

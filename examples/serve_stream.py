@@ -1,0 +1,68 @@
+"""Online MDGNN serving: events stream in micro-batches; each batch first
+answers link-prediction queries at the batch timestamps, then folds the
+observed events into the memory (the deployment regime of recommenders /
+fraud detection). Run after quickstart-style training, or standalone with a
+briefly trained model.
+
+    PYTHONPATH=src python examples/serve_stream.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import datasets
+from repro.graph.negatives import sample_negatives
+from repro.models.mdgnn import MDGNNConfig, init_params, init_state
+from repro.optim import adamw
+from repro.train import loop
+from repro.utils import metrics as metrics_lib
+
+
+def main():
+    spec = datasets.SyntheticSpec("stream", 200, 80, 5000, 8)
+    stream = datasets.generate(spec, seed=0)
+    train_s, _, serve_s = stream.chronological_split(0.6, 0.0)
+    dst = (spec.n_users, spec.n_users + spec.n_items)
+
+    cfg = MDGNNConfig(variant="tgn", n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=32, d_msg=32, d_time=16,
+                      d_embed=32, n_neighbors=8, use_pres=True)
+    key = jax.random.PRNGKey(0)
+    params, _ = init_params(key, cfg)
+    state = init_state(cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    # ---- offline training phase -------------------------------------------
+    step = loop.make_train_step(cfg, opt)
+    batches = train_s.temporal_batches(300)
+    for epoch in range(3):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, res = loop.run_epoch(
+            params, opt_state, state, batches, cfg, step, sub, dst)
+        print(f"[train] epoch {epoch}: ap={res.ap:.4f}")
+
+    # ---- online serving phase ---------------------------------------------
+    eval_step = loop.make_eval_step(cfg)
+    micro = serve_s.temporal_batches(64)
+    pos_all, neg_all, n_events = [], [], 0
+    t0 = time.perf_counter()
+    for i in range(1, len(micro)):
+        key, sub = jax.random.split(key)
+        neg = sample_negatives(sub, micro[i], *dst)
+        # score candidate pairs for batch i, then fold batch i-1's events
+        state, lp, ln = eval_step(params, state, micro[i - 1], micro[i], neg)
+        pos_all.append(np.asarray(lp))
+        neg_all.append(np.asarray(ln))
+        n_events += int(jnp.sum(micro[i].mask))
+    dt = time.perf_counter() - t0
+    ap = metrics_lib.average_precision(np.concatenate(pos_all),
+                                       np.concatenate(neg_all))
+    print(f"[serve] streamed {n_events} unseen future events in {dt:.2f}s "
+          f"({n_events / dt:.0f} ev/s), online AP={ap:.4f}")
+
+
+if __name__ == "__main__":
+    main()

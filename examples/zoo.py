@@ -1,0 +1,77 @@
+"""Architecture zoo tour: instantiate every assigned architecture (reduced
+config), run a train step and a cached decode step, and print parameter
+counts — the same code paths the production dry-run lowers onto the
+256/512-chip meshes.
+
+    PYTHONPATH=src python examples/zoo.py [--arch qwen3-0.6b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs.api import get_model
+from repro.configs import ARCH_IDS, get_config
+from repro.nn.module import param_count
+from repro.optim import adamw
+
+
+def run_arch(arch_id: str):
+    t0 = time.time()
+    cfg = get_config(arch_id).reduced()
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, _ = model.init(key)
+    n_params = param_count(params)
+
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    if model.extra_inputs:
+        for k, v in model.extra_inputs(B, S).items():
+            batch[k] = jnp.zeros(v.shape, v.dtype)
+
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def train_step(p, s, b):
+        (loss, _), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, b)
+        u, s = opt.update(g, s, p)
+        from repro.optim import apply_updates
+        return apply_updates(p, u), s, loss
+
+    params, opt_state, loss = train_step(params, opt_state, batch)
+
+    decode_ms = None
+    if model.decode_step is not None:
+        state = model.init_decode_state(B, S)
+        if arch_id == "whisper-tiny":
+            state["enc_out"] = model.encode(params, batch["audio_feats"])
+        tok = toks[:, :1]
+        logits, state = model.decode_step(params, state, tok, jnp.asarray(0))
+        t1 = time.time()
+        for i in range(1, 8):
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            logits, state = model.decode_step(params, state, tok,
+                                              jnp.asarray(i))
+        decode_ms = (time.time() - t1) / 7 * 1e3
+
+    dec = f"{decode_ms:6.1f}ms/tok" if decode_ms is not None else "   (enc-dec)"
+    print(f"{arch_id:24s} [{cfg.family:6s}] params={n_params / 1e6:7.2f}M "
+          f"loss={float(loss):7.4f} decode={dec} ({time.time() - t0:.1f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    print(f"{'architecture':24s} {'family':8s} (reduced smoke configs)")
+    for a in archs:
+        run_arch(a)
+
+
+if __name__ == "__main__":
+    main()

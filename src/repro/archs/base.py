@@ -1,0 +1,202 @@
+"""Architecture zoo base: ModelConfig, shared assembly helpers, entry points.
+
+Every architecture exposes a `Model` bundle:
+    init(key)                    -> (params, axes)
+    forward(params, batch)       -> logits (B,S,V)   [training / prefill math]
+    loss_fn(params, batch)       -> scalar loss      [CE + aux]
+    init_decode_state(batch)     -> state pytree     [KV caches / SSM states]
+    decode_step(params, state, tokens, pos) -> (logits, state)
+    state_axes                   -> logical-axis tree for the decode state
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+from repro.nn.module import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: int | None = None           # sliding-window size for local layers
+    global_every: int = 0               # every Nth layer is global (gemma 5:1 -> 6)
+    logit_softcap: float | None = None
+    attn_softcap: float | None = None
+    # blockwise online-softmax attention for long sequences (None = dense).
+    # Engaged when S >= 2*attn_chunk; peak score memory O(S * chunk).
+    attn_chunk: int | None = 2048
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    dense_residual: bool = False        # arctic: dense FFN branch in parallel
+    first_dense: int = 0                # kimi: first N layers are dense FFN
+    n_shared_experts: int = 0           # kimi: always-on shared expert(s)
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    # SSM / xLSTM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    mamba_expand: int = 2
+    slstm_every: int = 0                # xLSTM: every Nth layer is sLSTM
+    attn_every: int = 0                 # zamba2: shared attn after every Nth block
+    # audio (whisper) / vlm
+    enc_layers: int = 0
+    enc_frames: int = 1500
+    num_patches: int = 0
+    mrope_sections: tuple[int, ...] | None = None
+    # runtime
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    scan_layers: bool = True
+    max_seq: int = 8192                 # positional table size (whisper only)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def reduced(self, **kw) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model<=512, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = min(self.n_kv_heads, n_heads)
+        upd = dict(
+            n_layers=2,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_head=d_model // n_heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 1024),
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            first_dense=min(self.first_dense, 1),
+            global_every=2 if self.global_every else 0,
+            window=min(self.window, 64) if self.window else None,
+            slstm_every=2 if self.slstm_every else 0,
+            attn_every=2 if self.attn_every else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            enc_frames=16 if self.enc_layers else self.enc_frames,
+            num_patches=8 if self.num_patches else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            dtype=jnp.float32,
+            remat=False,
+            scan_layers=False,
+            max_seq=512,
+        )
+        if self.mrope_sections:
+            hd = d_model // n_heads
+            s0 = hd // 2 - 2 * (hd // 6)
+            upd["mrope_sections"] = (s0, hd // 6, hd // 6)
+        upd.update(kw)
+        return dataclasses.replace(self, **upd)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    init_decode_state: Callable | None = None
+    decode_step: Callable | None = None
+    state_axes: Any = None
+    extra_inputs: Callable | None = None  # shape -> dict of aux arrays (vlm/audio)
+    encode: Callable | None = None        # enc-dec only: frontend encoder
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded up to 256 so the 'vocab' dim shards on a 16-way axis
+    (whisper's 51865 is the one non-divisible case)."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def make_embedding(b: ParamBuilder, cfg: ModelConfig):
+    layers.embedding_init(b, "embed", padded_vocab(cfg), cfg.d_model)
+    layers.rmsnorm_init(b, "final_norm", cfg.d_model)
+    if not cfg.tie_embeddings:
+        layers.linear_init(b, "lm_head", cfg.d_model, padded_vocab(cfg),
+                           in_axis="embed", out_axis="vocab")
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    x = layers.embed(params["embed"], tokens, dtype=cfg.dtype)
+    return x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    x = layers.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["lm_head"], x, dtype=jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if padded_vocab(cfg) != cfg.vocab:
+        logits = logits[..., : cfg.vocab]
+    return logits
+
+
+def cross_entropy(logits, targets, mask=None):
+    """logits fp32 (B,S,V); targets int (B,S).
+
+    The gold logit is picked with a one-hot contraction, NOT
+    take_along_axis: a vocab-sharded logits tensor stays sharded this way
+    (local partial + a (B,S)-sized psum), whereas a gather over the sharded
+    vocab dim makes GSPMD replicate the full (B,S,V) fp32 logits — 68 GB
+    per device at gemma3's 262k vocab (EXPERIMENTS.md §Perf pair 3)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = jax.nn.one_hot(targets, v, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def scan_blocks(block_fn, stacked_params, x, *, remat: bool, unroll_params=None):
+    """Scan `block_fn(params_i, x) -> x` over a stacked params tree."""
+    from repro.train import annotate
+
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def body(carry, p):
+        p = jax.tree.map(annotate.weights, p)   # FSDP weight-gather hook
+        return fn(p, carry), None
+
+    x, _ = jax.lax.scan(body, x, stacked_params)
+    return x
+
+
+def run_blocks(block_fn, params_list, x, *, remat: bool):
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+    for p in params_list:
+        x = fn(p, x)
+    return x

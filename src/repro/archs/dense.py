@@ -1,0 +1,174 @@
+"""Dense decoder-only family: gemma3 (5:1 sliding-window:global), command-r,
+qwen2 (QKV bias), qwen3 (qk-norm), qwen2-vl (M-RoPE + patch-embedding stub)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import base
+from repro.archs.base import Model, ModelConfig
+from repro.nn import attention as attn_lib
+from repro.nn import layers
+from repro.nn.module import ParamBuilder, stack_params
+
+
+def unit_pattern(cfg: ModelConfig) -> list[str]:
+    if cfg.global_every:
+        return ["local"] * (cfg.global_every - 1) + ["global"]
+    return ["global" if cfg.window is None else "local"]
+
+
+def _init_block(b: ParamBuilder, cfg: ModelConfig):
+    layers.rmsnorm_init(b, "ln_attn", cfg.d_model)
+    attn_lib.attention_init(
+        b, "attn", cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    layers.rmsnorm_init(b, "ln_mlp", cfg.d_model)
+    layers.mlp_init(b, "mlp", cfg.d_model, cfg.d_ff, gated=True)
+
+
+def _block_apply(cfg: ModelConfig, kind: str, p, x, positions, mrope_positions):
+    h = layers.rmsnorm(p["ln_attn"], x)
+    window = cfg.window if kind == "local" else None
+    h = attn_lib.attention(
+        p["attn"], h, positions, d_head=cfg.head_dim,
+        causal=True, window=window, rope_theta=cfg.rope_theta,
+        mrope_sections=cfg.mrope_sections,
+        mrope_positions=mrope_positions,
+        softmax_scale_cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+    x = x + h
+    h = layers.rmsnorm(p["ln_mlp"], x)
+    x = x + layers.mlp(p["mlp"], h, act=cfg.act)
+    return x
+
+
+def build(cfg: ModelConfig) -> Model:
+    unit = unit_pattern(cfg)
+    n_units = cfg.n_layers // len(unit)
+    assert n_units * len(unit) == cfg.n_layers, (cfg.arch_id, unit)
+
+    # ------------------------------------------------------------- init ----
+    def init(key):
+        b = ParamBuilder(key, cfg.param_dtype)
+        base.make_embedding(b, cfg)
+        unit_trees = []
+        for _ in range(n_units):
+            ub = ParamBuilder(b.next_key(), cfg.param_dtype)
+            for j in range(len(unit)):
+                _init_block(ub.sub(f"b{j}"), cfg)
+            unit_trees.append((ub.params, ub.axes))
+        if cfg.scan_layers:
+            stacked, ax = stack_params([p for p, _ in unit_trees], unit_trees[0][1])
+            b.params["blocks"], b.axes["blocks"] = stacked, ax
+        else:
+            b.params["blocks"] = {f"u{i}": p for i, (p, _) in enumerate(unit_trees)}
+            b.axes["blocks"] = {f"u{i}": a for i, (_, a) in enumerate(unit_trees)}
+        return b.params, b.axes
+
+    # ---------------------------------------------------------- forward ----
+    def _unit_apply(p, x, positions, mrope_positions):
+        for j, kind in enumerate(unit):
+            x = _block_apply(cfg, kind, p[f"b{j}"], x, positions, mrope_positions)
+        return x
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        x = base.embed_tokens(params, cfg, tokens)
+        mrope_positions = None
+        if cfg.num_patches:
+            # VLM stub: precomputed patch embeddings prepended to text tokens.
+            patches = batch["patch_embeds"].astype(cfg.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            mrope_positions = batch["mrope_positions"]  # (B,3,S_total)
+        b_, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b_, s))
+        if cfg.mrope_sections and mrope_positions is None:
+            # text-only M-RoPE: temporal/height/width coords all advance with
+            # the token index (Qwen2-VL Sec. 3.1)
+            mrope_positions = jnp.broadcast_to(positions[:, None], (b_, 3, s))
+        body = lambda p, h: _unit_apply(p, h, positions, mrope_positions)
+        if cfg.scan_layers:
+            x = base.scan_blocks(body, params["blocks"], x, remat=cfg.remat)
+        else:
+            x = base.run_blocks(body, [params["blocks"][f"u{i}"] for i in range(n_units)],
+                                x, remat=cfg.remat)
+        if cfg.num_patches:
+            x = x[:, cfg.num_patches:]
+        return base.lm_logits(params, cfg, x)
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        return base.cross_entropy(logits, batch["targets"]), {}
+
+    # ----------------------------------------------------------- decode ----
+    def init_decode_state(batch_size: int, cache_len: int):
+        def unit_cache():
+            out = {}
+            for j, kind in enumerate(unit):
+                length = min(cfg.window, cache_len) if kind == "local" else cache_len
+                out[f"b{j}"] = attn_lib.init_cache(
+                    batch_size, length, cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+            return out
+
+        if cfg.scan_layers:
+            caches = [unit_cache() for _ in range(n_units)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        return {f"u{i}": unit_cache() for i in range(n_units)}
+
+    def state_axes():
+        per = {f"b{j}": dict(attn_lib.CACHE_AXES) for j in range(len(unit))}
+        if cfg.scan_layers:
+            return jax.tree.map(lambda ax: ("layers", *ax), per,
+                                is_leaf=lambda x: isinstance(x, tuple))
+        return {f"u{i}": per for i in range(n_units)}
+
+    def _unit_decode(p, x, cache, pos, mrope_pos):
+        new_cache = {}
+        for j, kind in enumerate(unit):
+            h = layers.rmsnorm(p[f"b{j}"]["ln_attn"], x)
+            window = cfg.window if kind == "local" else None
+            h, new_cache[f"b{j}"] = attn_lib.decode_attention(
+                p[f"b{j}"]["attn"], h, cache[f"b{j}"], pos, d_head=cfg.head_dim,
+                window=window, rope_theta=cfg.rope_theta,
+                mrope_sections=cfg.mrope_sections, mrope_positions=mrope_pos,
+                softmax_scale_cap=cfg.attn_softcap)
+            x = x + h
+            h = layers.rmsnorm(p[f"b{j}"]["ln_mlp"], x)
+            x = x + layers.mlp(p[f"b{j}"]["mlp"], h, act=cfg.act)
+        return x, new_cache
+
+    def decode_step(params, state, tokens, pos):
+        x = base.embed_tokens(params, cfg, tokens)  # (B,1,d)
+        mrope_pos = None
+        if cfg.mrope_sections:
+            mrope_pos = jnp.broadcast_to(
+                jnp.full((1, 3, 1), 0, jnp.int32) + pos, (x.shape[0], 3, 1))
+
+        if cfg.scan_layers:
+            def body(h, inp):
+                p, c = inp
+                h, c2 = _unit_decode(p, h, c, pos, mrope_pos)
+                return h, c2
+
+            x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+        else:
+            new_state = {}
+            for i in range(n_units):
+                x, new_state[f"u{i}"] = _unit_decode(
+                    params["blocks"][f"u{i}"], x, state[f"u{i}"], pos, mrope_pos)
+        logits = base.lm_logits(params, cfg, x)
+        return logits, new_state
+
+    def extra_inputs(batch_size: int, seq_len: int):
+        if not cfg.num_patches:
+            return {}
+        s_total = cfg.num_patches + seq_len
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (batch_size, cfg.num_patches, cfg.d_model), cfg.dtype),
+            "mrope_positions": jax.ShapeDtypeStruct((batch_size, 3, s_total), jnp.int32),
+        }
+
+    return Model(cfg=cfg, init=init, forward=forward, loss_fn=loss_fn,
+                 init_decode_state=init_decode_state, decode_step=decode_step,
+                 state_axes=state_axes, extra_inputs=extra_inputs)

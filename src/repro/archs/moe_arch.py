@@ -1,0 +1,184 @@
+"""MoE decoder family: arctic-480b (128e top-2 + dense residual branch) and
+kimi-k2-1t-a32b (384e top-8, first layer dense, shared expert)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import base
+from repro.archs.base import Model, ModelConfig
+from repro.nn import attention as attn_lib
+from repro.nn import layers
+from repro.nn import moe as moe_lib
+from repro.nn.module import ParamBuilder, stack_params
+
+
+def _init_attn(b: ParamBuilder, cfg: ModelConfig):
+    layers.rmsnorm_init(b, "ln_attn", cfg.d_model)
+    attn_lib.attention_init(b, "attn", cfg.d_model, cfg.n_heads,
+                            cfg.n_kv_heads, cfg.head_dim,
+                            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    layers.rmsnorm_init(b, "ln_mlp", cfg.d_model)
+
+
+def _init_moe_block(b: ParamBuilder, cfg: ModelConfig):
+    _init_attn(b, cfg)
+    moe_lib.moe_init(b, "moe", cfg.d_model, cfg.d_ff, cfg.n_experts)
+    if cfg.dense_residual:
+        layers.mlp_init(b, "dense_mlp", cfg.d_model, cfg.d_ff, gated=True)
+    if cfg.n_shared_experts:
+        layers.mlp_init(b, "shared_mlp", cfg.d_model,
+                        cfg.d_ff * cfg.n_shared_experts, gated=True)
+
+
+def _init_dense_block(b: ParamBuilder, cfg: ModelConfig):
+    _init_attn(b, cfg)
+    # first-dense layers use a wide dense FFN (kimi: ~4x d_model like DeepSeek)
+    layers.mlp_init(b, "dense_mlp", cfg.d_model, max(cfg.d_ff, 4 * cfg.d_model),
+                    gated=True)
+
+
+def _attn_apply(cfg, p, x, positions):
+    h = layers.rmsnorm(p["ln_attn"], x)
+    h = attn_lib.attention(p["attn"], h, positions, d_head=cfg.head_dim,
+                           causal=True, rope_theta=cfg.rope_theta,
+                           chunk=cfg.attn_chunk)
+    return x + h
+
+
+def build(cfg: ModelConfig) -> Model:
+    n_moe = cfg.n_layers - cfg.first_dense
+
+    def init(key):
+        b = ParamBuilder(key, cfg.param_dtype)
+        base.make_embedding(b, cfg)
+        for i in range(cfg.first_dense):
+            _init_dense_block(b.sub(f"dense_{i}"), cfg)
+        unit_trees = []
+        for _ in range(n_moe):
+            ub = ParamBuilder(b.next_key(), cfg.param_dtype)
+            _init_moe_block(ub, cfg)
+            unit_trees.append((ub.params, ub.axes))
+        if cfg.scan_layers:
+            stacked, ax = stack_params([p for p, _ in unit_trees], unit_trees[0][1])
+            b.params["blocks"], b.axes["blocks"] = stacked, ax
+        else:
+            b.params["blocks"] = {f"u{i}": p for i, (p, _) in enumerate(unit_trees)}
+            b.axes["blocks"] = {f"u{i}": a for i, (_, a) in enumerate(unit_trees)}
+        return b.params, b.axes
+
+    def _moe_block(p, carry, positions):
+        x, aux = carry
+        x = _attn_apply(cfg, p, x, positions)
+        h = layers.rmsnorm(p["ln_mlp"], x)
+        y, aux_i = moe_lib.moe(p["moe"], h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor, act=cfg.act)
+        if cfg.dense_residual:
+            y = y + layers.mlp(p["dense_mlp"], h, act=cfg.act)
+        if cfg.n_shared_experts:
+            y = y + layers.mlp(p["shared_mlp"], h, act=cfg.act)
+        return (x + y, aux + aux_i)
+
+    def _dense_block(p, x, positions):
+        x = _attn_apply(cfg, p, x, positions)
+        h = layers.rmsnorm(p["ln_mlp"], x)
+        return x + layers.mlp(p["dense_mlp"], h, act=cfg.act)
+
+    def forward_with_aux(params, batch):
+        tokens = batch["tokens"]
+        x = base.embed_tokens(params, cfg, tokens)
+        b_, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b_, s))
+        for i in range(cfg.first_dense):
+            x = _dense_block(params[f"dense_{i}"], x, positions)
+        body = lambda p, c: _moe_block(p, c, positions)
+        carry = (x, jnp.zeros((), jnp.float32))
+        if cfg.scan_layers:
+            fn = jax.checkpoint(body) if cfg.remat else body
+
+            def sbody(c, p):
+                return fn(p, c), None
+
+            carry, _ = jax.lax.scan(sbody, carry, params["blocks"])
+        else:
+            fn = jax.checkpoint(body) if cfg.remat else body
+            for i in range(n_moe):
+                carry = fn(params["blocks"][f"u{i}"], carry)
+        x, aux = carry
+        return base.lm_logits(params, cfg, x), aux / max(n_moe, 1)
+
+    def forward(params, batch):
+        return forward_with_aux(params, batch)[0]
+
+    def loss_fn(params, batch):
+        logits, aux = forward_with_aux(params, batch)
+        ce = base.cross_entropy(logits, batch["targets"])
+        return ce + cfg.moe_aux_weight * aux, {"aux": aux}
+
+    # ----------------------------------------------------------- decode ----
+    def init_decode_state(batch_size: int, cache_len: int):
+        mk = lambda: attn_lib.init_cache(batch_size, cache_len, cfg.n_kv_heads,
+                                         cfg.head_dim, cfg.dtype)
+        state = {f"dense_{i}": mk() for i in range(cfg.first_dense)}
+        if cfg.scan_layers:
+            caches = [mk() for _ in range(n_moe)]
+            state["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        else:
+            state["blocks"] = {f"u{i}": mk() for i in range(n_moe)}
+        return state
+
+    def state_axes():
+        per = dict(attn_lib.CACHE_AXES)
+        state = {f"dense_{i}": per for i in range(cfg.first_dense)}
+        if cfg.scan_layers:
+            state["blocks"] = jax.tree.map(lambda ax: ("layers", *ax), per,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            state["blocks"] = {f"u{i}": per for i in range(n_moe)}
+        return state
+
+    def _moe_decode(p, x, cache, pos):
+        h = layers.rmsnorm(p["ln_attn"], x)
+        h, cache = attn_lib.decode_attention(p["attn"], h, cache, pos,
+                                             d_head=cfg.head_dim,
+                                             rope_theta=cfg.rope_theta)
+        x = x + h
+        h = layers.rmsnorm(p["ln_mlp"], x)
+        y, _ = moe_lib.moe(p["moe"], h, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor, act=cfg.act)
+        if cfg.dense_residual:
+            y = y + layers.mlp(p["dense_mlp"], h, act=cfg.act)
+        if cfg.n_shared_experts:
+            y = y + layers.mlp(p["shared_mlp"], h, act=cfg.act)
+        return x + y, cache
+
+    def decode_step(params, state, tokens, pos):
+        x = base.embed_tokens(params, cfg, tokens)
+        new_state = dict(state)
+        for i in range(cfg.first_dense):
+            h = layers.rmsnorm(params[f"dense_{i}"]["ln_attn"], x)
+            h, new_state[f"dense_{i}"] = attn_lib.decode_attention(
+                params[f"dense_{i}"]["attn"], h, state[f"dense_{i}"], pos,
+                d_head=cfg.head_dim, rope_theta=cfg.rope_theta)
+            x = x + h
+            h = layers.rmsnorm(params[f"dense_{i}"]["ln_mlp"], x)
+            x = x + layers.mlp(params[f"dense_{i}"]["dense_mlp"], h, act=cfg.act)
+        if cfg.scan_layers:
+            def body(h, inp):
+                p, c = inp
+                h, c2 = _moe_decode(p, h, c, pos)
+                return h, c2
+
+            x, new_state["blocks"] = jax.lax.scan(body, x,
+                                                  (params["blocks"], state["blocks"]))
+        else:
+            nb = {}
+            for i in range(n_moe):
+                x, nb[f"u{i}"] = _moe_decode(params["blocks"][f"u{i}"], x,
+                                             state["blocks"][f"u{i}"], pos)
+            new_state["blocks"] = nb
+        return base.lm_logits(params, cfg, x), new_state
+
+    return Model(cfg=cfg, init=init, forward=forward, loss_fn=loss_fn,
+                 init_decode_state=init_decode_state, decode_step=decode_step,
+                 state_axes=state_axes)

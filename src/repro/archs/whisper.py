@@ -1,0 +1,179 @@
+"""whisper-tiny: encoder-decoder transformer backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv frontend is a STUB per the brief: `extra_inputs`
+supplies precomputed frame embeddings (B, enc_frames, d_model). We implement
+the 4-layer encoder + 4-layer decoder backbone with cross-attention, learned
+decoder positions (table extended to max_seq for the decode shapes), and a
+cached decode path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import base
+from repro.archs.base import Model, ModelConfig
+from repro.nn import attention as attn_lib
+from repro.nn import layers
+from repro.nn.module import ParamBuilder, stack_params
+
+
+def _sinusoid(n: int, d: int):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def build(cfg: ModelConfig) -> Model:
+    def _init_enc_block(b: ParamBuilder):
+        layers.layernorm_init(b, "ln_attn", cfg.d_model)
+        attn_lib.attention_init(b, "attn", cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim, qkv_bias=True,
+                                out_bias=True)
+        layers.layernorm_init(b, "ln_mlp", cfg.d_model)
+        layers.mlp_init(b, "mlp", cfg.d_model, cfg.d_ff, gated=False, bias=True)
+
+    def _init_dec_block(b: ParamBuilder):
+        _init_enc_block(b)
+        layers.layernorm_init(b, "ln_cross", cfg.d_model)
+        attn_lib.attention_init(b, "cross", cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim, qkv_bias=True,
+                                out_bias=True)
+
+    def init(key):
+        b = ParamBuilder(key, cfg.param_dtype)
+        base.make_embedding(b, cfg)
+        b.add("dec_pos", (cfg.max_seq, cfg.d_model), (None, "embed"),
+              init="normal", scale=0.02)
+        layers.layernorm_init(b, "enc_final_norm", cfg.d_model)
+        enc_trees, dec_trees = [], []
+        for _ in range(cfg.enc_layers):
+            ub = ParamBuilder(b.next_key(), cfg.param_dtype)
+            _init_enc_block(ub)
+            enc_trees.append((ub.params, ub.axes))
+        for _ in range(cfg.n_layers):
+            ub = ParamBuilder(b.next_key(), cfg.param_dtype)
+            _init_dec_block(ub)
+            dec_trees.append((ub.params, ub.axes))
+        if cfg.scan_layers:
+            b.params["enc"], b.axes["enc"] = stack_params(
+                [p for p, _ in enc_trees], enc_trees[0][1])
+            b.params["dec"], b.axes["dec"] = stack_params(
+                [p for p, _ in dec_trees], dec_trees[0][1])
+        else:
+            b.params["enc"] = {f"u{i}": p for i, (p, _) in enumerate(enc_trees)}
+            b.axes["enc"] = {f"u{i}": a for i, (_, a) in enumerate(enc_trees)}
+            b.params["dec"] = {f"u{i}": p for i, (p, _) in enumerate(dec_trees)}
+            b.axes["dec"] = {f"u{i}": a for i, (_, a) in enumerate(dec_trees)}
+        return b.params, b.axes
+
+    def _enc_block(p, x):
+        h = layers.layernorm(p["ln_attn"], x)
+        h = attn_lib.attention(p["attn"], h, None, d_head=cfg.head_dim,
+                               causal=False, rope_theta=None)
+        x = x + h
+        h = layers.layernorm(p["ln_mlp"], x)
+        return x + layers.mlp(p["mlp"], h, act="gelu")
+
+    def _dec_block(p, x, enc_out, positions):
+        h = layers.layernorm(p["ln_attn"], x)
+        h = attn_lib.attention(p["attn"], h, None, d_head=cfg.head_dim,
+                               causal=True, rope_theta=None)
+        x = x + h
+        h = layers.layernorm(p["ln_cross"], x)
+        x = x + attn_lib.cross_attention(p["cross"], h, enc_out, d_head=cfg.head_dim)
+        h = layers.layernorm(p["ln_mlp"], x)
+        return x + layers.mlp(p["mlp"], h, act="gelu")
+
+    def encode(params, audio_feats):
+        x = audio_feats.astype(cfg.dtype)
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cfg.dtype)[None]
+        if cfg.scan_layers:
+            x = base.scan_blocks(lambda p, h: _enc_block(p, h), params["enc"], x,
+                                 remat=cfg.remat)
+        else:
+            x = base.run_blocks(lambda p, h: _enc_block(p, h),
+                                [params["enc"][f"u{i}"] for i in range(cfg.enc_layers)],
+                                x, remat=cfg.remat)
+        return layers.layernorm(params["enc_final_norm"], x)
+
+    def forward(params, batch):
+        enc_out = encode(params, batch["audio_feats"])
+        tokens = batch["tokens"]
+        b_, s = tokens.shape
+        x = layers.embed(params["embed"], tokens, dtype=cfg.dtype)
+        x = x + params["dec_pos"][:s].astype(cfg.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b_, s))
+        body = lambda p, h: _dec_block(p, h, enc_out, positions)
+        if cfg.scan_layers:
+            x = base.scan_blocks(body, params["dec"], x, remat=cfg.remat)
+        else:
+            x = base.run_blocks(body, [params["dec"][f"u{i}"] for i in range(cfg.n_layers)],
+                                x, remat=cfg.remat)
+        return base.lm_logits(params, cfg, x)
+
+    def loss_fn(params, batch):
+        return base.cross_entropy(forward(params, batch), batch["targets"]), {}
+
+    # ----------------------------------------------------------- decode ----
+    def init_decode_state(batch_size: int, cache_len: int):
+        mk = lambda: attn_lib.init_cache(batch_size, cache_len, cfg.n_kv_heads,
+                                         cfg.head_dim, cfg.dtype)
+        state = {"enc_out": jnp.zeros((batch_size, cfg.enc_frames, cfg.d_model),
+                                      cfg.dtype)}
+        if cfg.scan_layers:
+            caches = [mk() for _ in range(cfg.n_layers)]
+            state["self"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        else:
+            state["self"] = {f"u{i}": mk() for i in range(cfg.n_layers)}
+        return state
+
+    def state_axes():
+        per = dict(attn_lib.CACHE_AXES)
+        st = {"enc_out": ("batch", None, "embed")}
+        if cfg.scan_layers:
+            st["self"] = jax.tree.map(lambda ax: ("layers", *ax), per,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            st["self"] = {f"u{i}": per for i in range(cfg.n_layers)}
+        return st
+
+    def _dec_decode(p, x, cache, enc_out, pos):
+        h = layers.layernorm(p["ln_attn"], x)
+        h, cache = attn_lib.decode_attention(p["attn"], h, cache, pos,
+                                             d_head=cfg.head_dim, rope_theta=None)
+        x = x + h
+        h = layers.layernorm(p["ln_cross"], x)
+        x = x + attn_lib.cross_attention(p["cross"], h, enc_out, d_head=cfg.head_dim)
+        h = layers.layernorm(p["ln_mlp"], x)
+        return x + layers.mlp(p["mlp"], h, act="gelu"), cache
+
+    def decode_step(params, state, tokens, pos):
+        x = layers.embed(params["embed"], tokens, dtype=cfg.dtype)
+        x = x + jax.lax.dynamic_slice(params["dec_pos"], (pos, 0),
+                                      (1, cfg.d_model)).astype(cfg.dtype)[None]
+        enc_out = state["enc_out"]
+        if cfg.scan_layers:
+            def body(h, inp):
+                p, c = inp
+                h, c2 = _dec_decode(p, h, c, enc_out, pos)
+                return h, c2
+
+            x, new_self = jax.lax.scan(body, x, (params["dec"], state["self"]))
+        else:
+            new_self = {}
+            for i in range(cfg.n_layers):
+                x, new_self[f"u{i}"] = _dec_decode(params["dec"][f"u{i}"], x,
+                                                   state["self"][f"u{i}"], enc_out, pos)
+        return base.lm_logits(params, cfg, x), {"enc_out": enc_out, "self": new_self}
+
+    def extra_inputs(batch_size: int, seq_len: int):
+        return {"audio_feats": jax.ShapeDtypeStruct(
+            (batch_size, cfg.enc_frames, cfg.d_model), cfg.dtype)}
+
+    return Model(cfg=cfg, init=init, forward=forward, loss_fn=loss_fn,
+                 init_decode_state=init_decode_state, decode_step=decode_step,
+                 state_axes=state_axes, extra_inputs=extra_inputs,
+                 encode=encode)

@@ -1,0 +1,140 @@
+"""xlstm-350m: alternating mLSTM / sLSTM residual blocks (arXiv:2405.04517).
+
+Pattern unit = (slstm_every - 1) mLSTM blocks + 1 sLSTM block. Sub-quadratic:
+mLSTM is chunked-parallel, sLSTM is a sequential scan; decode carries O(1)
+recurrent state, so long_500k applies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import base
+from repro.archs.base import Model, ModelConfig
+from repro.nn import layers, xlstm
+from repro.nn.module import ParamBuilder, stack_params
+
+
+def build(cfg: ModelConfig) -> Model:
+    every = cfg.slstm_every or (cfg.n_layers + 1)  # 0 -> all mLSTM
+    unit = ["mlstm"] * (min(every, cfg.n_layers) - 1) + ["slstm"]
+    if cfg.slstm_every == 0:
+        unit = ["mlstm"]
+    n_units = cfg.n_layers // len(unit)
+    assert n_units * len(unit) == cfg.n_layers, (cfg.arch_id, unit, cfg.n_layers)
+
+    def init(key):
+        b = ParamBuilder(key, cfg.param_dtype)
+        base.make_embedding(b, cfg)
+        unit_trees = []
+        for _ in range(n_units):
+            ub = ParamBuilder(b.next_key(), cfg.param_dtype)
+            for j, kind in enumerate(unit):
+                blk = ub.sub(f"b{j}")
+                layers.rmsnorm_init(blk, "ln", cfg.d_model)
+                if kind == "mlstm":
+                    xlstm.mlstm_init(blk, "cell", cfg.d_model, cfg.n_heads)
+                else:
+                    xlstm.slstm_init(blk, "cell", cfg.d_model, cfg.n_kv_heads)
+            unit_trees.append((ub.params, ub.axes))
+        if cfg.scan_layers:
+            stacked, ax = stack_params([p for p, _ in unit_trees], unit_trees[0][1])
+            b.params["blocks"], b.axes["blocks"] = stacked, ax
+        else:
+            b.params["blocks"] = {f"u{i}": p for i, (p, _) in enumerate(unit_trees)}
+            b.axes["blocks"] = {f"u{i}": a for i, (_, a) in enumerate(unit_trees)}
+        return b.params, b.axes
+
+    def _unit_apply(p, x):
+        for j, kind in enumerate(unit):
+            blk = p[f"b{j}"]
+            h = layers.rmsnorm(blk["ln"], x)
+            if kind == "mlstm":
+                h = xlstm.mlstm(blk["cell"], h, n_heads=cfg.n_heads)
+            else:
+                h = xlstm.slstm(blk["cell"], h, n_heads=cfg.n_kv_heads)
+            x = x + h
+        return x
+
+    def forward(params, batch):
+        x = base.embed_tokens(params, cfg, batch["tokens"])
+        if cfg.scan_layers:
+            x = base.scan_blocks(_unit_apply, params["blocks"], x, remat=cfg.remat)
+        else:
+            x = base.run_blocks(_unit_apply,
+                                [params["blocks"][f"u{i}"] for i in range(n_units)],
+                                x, remat=cfg.remat)
+        return base.lm_logits(params, cfg, x)
+
+    def loss_fn(params, batch):
+        return base.cross_entropy(forward(params, batch), batch["targets"]), {}
+
+    # ----------------------------------------------------------- decode ----
+    def _unit_state(batch_size):
+        st = {}
+        for j, kind in enumerate(unit):
+            if kind == "mlstm":
+                d_head = cfg.d_model // cfg.n_heads
+                st[f"b{j}"] = jnp.zeros(
+                    (batch_size, cfg.n_heads, d_head, d_head + 1), jnp.float32)
+            else:
+                zero = jnp.zeros((batch_size, cfg.d_model), jnp.float32)
+                st[f"b{j}"] = (zero, zero, zero)
+        return st
+
+    def init_decode_state(batch_size: int, cache_len: int):
+        del cache_len  # O(1)-state decode
+        if cfg.scan_layers:
+            states = [_unit_state(batch_size) for _ in range(n_units)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        return {f"u{i}": _unit_state(batch_size) for i in range(n_units)}
+
+    def state_axes():
+        st = {}
+        for j, kind in enumerate(unit):
+            if kind == "mlstm":
+                # head count (4) does not divide the model axis; the matrix
+                # state stays replicated across model, sharded on batch.
+                st[f"b{j}"] = ("batch", None, None, None)
+            else:
+                st[f"b{j}"] = (("batch", "embed"),) * 3
+        if cfg.scan_layers:
+            return jax.tree.map(lambda ax: ("layers", *ax), st,
+                                is_leaf=lambda x: isinstance(x, tuple)
+                                and all(isinstance(e, (str, type(None))) for e in x))
+        return {f"u{i}": st for i in range(n_units)}
+
+    def _unit_decode(p, x, st):
+        new = {}
+        for j, kind in enumerate(unit):
+            blk = p[f"b{j}"]
+            h = layers.rmsnorm(blk["ln"], x)
+            if kind == "mlstm":
+                h, new[f"b{j}"] = xlstm.mlstm_decode(blk["cell"], h, st[f"b{j}"],
+                                                     n_heads=cfg.n_heads)
+            else:
+                h, new[f"b{j}"] = xlstm.slstm_decode(blk["cell"], h, st[f"b{j}"],
+                                                     n_heads=cfg.n_kv_heads)
+            x = x + h
+        return x, new
+
+    def decode_step(params, state, tokens, pos):
+        del pos
+        x = base.embed_tokens(params, cfg, tokens)
+        if cfg.scan_layers:
+            def body(h, inp):
+                p, s = inp
+                h, s2 = _unit_decode(p, h, s)
+                return h, s2
+
+            x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+        else:
+            new_state = {}
+            for i in range(n_units):
+                x, new_state[f"u{i}"] = _unit_decode(params["blocks"][f"u{i}"],
+                                                     x, state[f"u{i}"])
+        return base.lm_logits(params, cfg, x), new_state
+
+    return Model(cfg=cfg, init=init, forward=forward, loss_fn=loss_fn,
+                 init_decode_state=init_decode_state, decode_step=decode_step,
+                 state_axes=state_axes)

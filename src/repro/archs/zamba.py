@@ -1,0 +1,184 @@
+"""zamba2-1.2b: Mamba2 backbone with a *shared* (single-copy) attention+MLP
+block applied after every `attn_every`-th Mamba block (arXiv:2411.15242).
+
+Structure: n_units = n_layers // attn_every scanned units of
+(attn_every Mamba2 blocks + one shared-attn application); the remaining
+n_layers % attn_every Mamba blocks run unrolled at the end. Sub-quadratic:
+the shared attention sees the full sequence but only at n_units depths, and
+decode carries O(1) SSM state + n_units KV caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import base
+from repro.archs.base import Model, ModelConfig
+from repro.nn import attention as attn_lib
+from repro.nn import layers, ssm
+from repro.nn.module import ParamBuilder, stack_params
+
+
+def build(cfg: ModelConfig) -> Model:
+    every = cfg.attn_every or cfg.n_layers
+    n_units = cfg.n_layers // every
+    tail = cfg.n_layers - n_units * every
+
+    def _init_mamba(b: ParamBuilder, name: str):
+        blk = b.sub(name)
+        layers.rmsnorm_init(blk, "ln", cfg.d_model)
+        ssm.mamba2_init(blk, "cell", cfg.d_model, cfg.ssm_state,
+                        expand=cfg.mamba_expand, head_dim=cfg.ssm_head_dim)
+
+    def init(key):
+        b = ParamBuilder(key, cfg.param_dtype)
+        base.make_embedding(b, cfg)
+        # shared transformer block (single copy, reused at every application)
+        sh = b.sub("shared")
+        layers.rmsnorm_init(sh, "ln_attn", cfg.d_model)
+        attn_lib.attention_init(sh, "attn", cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim)
+        layers.rmsnorm_init(sh, "ln_mlp", cfg.d_model)
+        layers.mlp_init(sh, "mlp", cfg.d_model, cfg.d_ff, gated=True)
+        unit_trees = []
+        for _ in range(n_units):
+            ub = ParamBuilder(b.next_key(), cfg.param_dtype)
+            for j in range(every):
+                _init_mamba(ub, f"m{j}")
+            unit_trees.append((ub.params, ub.axes))
+        if cfg.scan_layers and n_units:
+            stacked, ax = stack_params([p for p, _ in unit_trees], unit_trees[0][1])
+            b.params["blocks"], b.axes["blocks"] = stacked, ax
+        else:
+            b.params["blocks"] = {f"u{i}": p for i, (p, _) in enumerate(unit_trees)}
+            b.axes["blocks"] = {f"u{i}": a for i, (_, a) in enumerate(unit_trees)}
+        for j in range(tail):
+            _init_mamba(b, f"tail_{j}")
+        return b.params, b.axes
+
+    def _mamba_apply(blk, x):
+        h = layers.rmsnorm(blk["ln"], x)
+        return x + ssm.mamba2(blk["cell"], h, d_state=cfg.ssm_state,
+                              head_dim=cfg.ssm_head_dim)
+
+    def _shared_apply(sh, x, positions):
+        h = layers.rmsnorm(sh["ln_attn"], x)
+        h = attn_lib.attention(sh["attn"], h, positions, d_head=cfg.head_dim,
+                               causal=True, rope_theta=cfg.rope_theta,
+                               chunk=cfg.attn_chunk)
+        x = x + h
+        h = layers.rmsnorm(sh["ln_mlp"], x)
+        return x + layers.mlp(sh["mlp"], h, act=cfg.act)
+
+    def forward(params, batch):
+        x = base.embed_tokens(params, cfg, batch["tokens"])
+        b_, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b_, s))
+        sh = params["shared"]
+
+        def unit(p, h):
+            for j in range(every):
+                h = _mamba_apply(p[f"m{j}"], h)
+            return _shared_apply(sh, h, positions)
+
+        if cfg.scan_layers and n_units:
+            x = base.scan_blocks(unit, params["blocks"], x, remat=cfg.remat)
+        else:
+            x = base.run_blocks(unit, [params["blocks"][f"u{i}"] for i in range(n_units)],
+                                x, remat=cfg.remat)
+        for j in range(tail):
+            x = _mamba_apply(params[f"tail_{j}"], x)
+        return base.lm_logits(params, cfg, x)
+
+    def loss_fn(params, batch):
+        return base.cross_entropy(forward(params, batch), batch["targets"]), {}
+
+    # ----------------------------------------------------------- decode ----
+    def _proto_mamba_state(batch_size):
+        n_heads_m = (cfg.mamba_expand * cfg.d_model) // cfg.ssm_head_dim
+        d_inner = n_heads_m * cfg.ssm_head_dim
+        return {
+            "ssm": jnp.zeros((batch_size, n_heads_m, cfg.ssm_state,
+                              cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((batch_size, 3, d_inner + 2 * cfg.ssm_state),
+                              jnp.float32),
+        }
+
+    def init_decode_state(batch_size: int, cache_len: int):
+        def unit_state():
+            st = {f"m{j}": _proto_mamba_state(batch_size) for j in range(every)}
+            st["cache"] = attn_lib.init_cache(batch_size, cache_len,
+                                              cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+            return st
+
+        if cfg.scan_layers and n_units:
+            states = [unit_state() for _ in range(n_units)]
+            state = {"units": jax.tree.map(lambda *xs: jnp.stack(xs), *states)}
+        else:
+            state = {"units": {f"u{i}": unit_state() for i in range(n_units)}}
+        state.update({f"tail_{j}": _proto_mamba_state(batch_size) for j in range(tail)})
+        return state
+
+    def state_axes():
+        m_ax = dict(ssm.MAMBA_STATE_AXES)
+        unit_ax = {f"m{j}": m_ax for j in range(every)}
+        unit_ax["cache"] = dict(attn_lib.CACHE_AXES)
+        is_ax = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        if cfg.scan_layers and n_units:
+            ax = {"units": jax.tree.map(lambda a: ("layers", *a), unit_ax, is_leaf=is_ax)}
+        else:
+            ax = {"units": {f"u{i}": unit_ax for i in range(n_units)}}
+        ax.update({f"tail_{j}": m_ax for j in range(tail)})
+        return ax
+
+    def _shared_decode(sh, x, cache, pos):
+        h = layers.rmsnorm(sh["ln_attn"], x)
+        h, cache = attn_lib.decode_attention(sh["attn"], h, cache, pos,
+                                             d_head=cfg.head_dim,
+                                             rope_theta=cfg.rope_theta)
+        x = x + h
+        h = layers.rmsnorm(sh["ln_mlp"], x)
+        return x + layers.mlp(sh["mlp"], h, act=cfg.act), cache
+
+    def decode_step(params, state, tokens, pos):
+        x = base.embed_tokens(params, cfg, tokens)
+        sh = params["shared"]
+
+        def unit_decode(p, h, st):
+            new = {}
+            for j in range(every):
+                hn = layers.rmsnorm(p[f"m{j}"]["ln"], h)
+                out, new[f"m{j}"] = ssm.mamba2_decode(
+                    p[f"m{j}"]["cell"], hn, st[f"m{j}"],
+                    d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+                h = h + out
+            h, new["cache"] = _shared_decode(sh, h, st["cache"], pos)
+            return h, new
+
+        new_state = {}
+        if cfg.scan_layers and n_units:
+            def body(h, inp):
+                p, st = inp
+                h, st2 = unit_decode(p, h, st)
+                return h, st2
+
+            x, new_state["units"] = jax.lax.scan(body, x,
+                                                 (params["blocks"], state["units"]))
+        else:
+            nu = {}
+            for i in range(n_units):
+                x, nu[f"u{i}"] = unit_decode(params["blocks"][f"u{i}"], x,
+                                             state["units"][f"u{i}"])
+            new_state["units"] = nu
+        for j in range(tail):
+            hn = layers.rmsnorm(params[f"tail_{j}"]["ln"], x)
+            out, new_state[f"tail_{j}"] = ssm.mamba2_decode(
+                params[f"tail_{j}"]["cell"], hn, state[f"tail_{j}"],
+                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+            x = x + out
+        return base.lm_logits(params, cfg, x), new_state
+
+    return Model(cfg=cfg, init=init, forward=forward, loss_fn=loss_fn,
+                 init_decode_state=init_decode_state, decode_step=decode_step,
+                 state_axes=state_axes)

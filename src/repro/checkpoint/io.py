@@ -1,0 +1,53 @@
+"""Tree checkpointing: msgpack manifest + npz tensor payload.
+
+Sharding-aware restore: tensors are loaded host-side and (optionally) placed
+with `jax.device_put(x, sharding)` from a shardings tree, so a checkpoint
+written on one mesh can be restored onto another (or onto the CPU).
+"""
+from __future__ import annotations
+
+import io
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    manifest = msgpack.packb({"treedef": str(treedef), "n_leaves": len(leaves)})
+    with open(path, "wb") as f:
+        f.write(len(manifest).to_bytes(8, "little"))
+        f.write(manifest)
+        f.write(buf.getvalue())
+
+
+def load_checkpoint(path: str, like_tree, shardings=None):
+    """Restore into the structure of `like_tree` (shape/dtype template)."""
+    with open(path, "rb") as f:
+        mlen = int.from_bytes(f.read(8), "little")
+        msgpack.unpackb(f.read(mlen))  # manifest (structure check only)
+        payload = io.BytesIO(f.read())
+    data = np.load(payload)
+    leaves, treedef = jax.tree.flatten(like_tree)
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        if hasattr(ref, "dtype"):
+            arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,12 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual branch
+[hf:Snowflake/snowflake-arctic-base]."""
+import jax.numpy as jnp
+from repro.archs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_head=128,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2, dense_residual=True,
+    tie_embeddings=False,
+)

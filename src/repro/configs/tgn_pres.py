@@ -1,0 +1,26 @@
+"""The paper's own model: TGN trained with PRES (the reproduction target).
+
+`CONFIG` is the synthetic-benchmark (CPU) scale; `PRODUCTION` is the
+node/feature scale used by the distributed dry-run entry (memory table
+sharded over the data axis)."""
+from repro.models.mdgnn import MDGNNConfig
+
+CONFIG = MDGNNConfig(
+    variant="tgn",
+    n_nodes=1000,
+    d_edge=16,
+    d_mem=100, d_msg=100, d_time=32, d_embed=100,
+    n_neighbors=10,
+    use_pres=True,
+    beta=0.1,            # paper's beta
+)
+
+PRODUCTION = MDGNNConfig(
+    variant="tgn",
+    n_nodes=1_048_576,   # 1M-node graph, memory table sharded over 'data'
+    d_edge=172,          # wiki/reddit edge-feature width
+    d_mem=128, d_msg=128, d_time=64, d_embed=128,
+    n_neighbors=16,
+    use_pres=True,
+    beta=0.1,
+)

@@ -1,0 +1,134 @@
+"""Temporal batching machinery: pending events / pending sets (Defs. 1-2),
+per-node last-message reduction (the batch-parallel semantics of Fig. 2(b)),
+and neighbour ring buffers.
+
+The per-node "one update per batch" reduction is exactly the paper's
+temporal-discontinuity object: all but the chronologically-last message per
+node within a batch are flattened away.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.events import EventBatch
+
+
+# ---------------------------------------------------------------------------
+# Pending sets (Defs. 1-2) — analysis utilities
+# ---------------------------------------------------------------------------
+
+
+def pending_counts(src, dst, t, mask=None) -> jnp.ndarray:
+    """|P(e, B)| for every event e in the batch: the number of earlier events
+    in the batch sharing a vertex. O(b^2) — an analysis probe, not a
+    training-path op."""
+    share = ((src[:, None] == src[None, :]) | (src[:, None] == dst[None, :]) |
+             (dst[:, None] == src[None, :]) | (dst[:, None] == dst[None, :]))
+    earlier = t[None, :] < t[:, None]
+    pend = share & earlier
+    if mask is not None:
+        pend = pend & mask[None, :] & mask[:, None]
+    return jnp.sum(pend, axis=1)
+
+
+def pending_fraction(batch: EventBatch) -> float:
+    """Fraction of events with a non-empty pending set — grows with batch
+    size; the empirical knob behind Theorem 2."""
+    cnt = pending_counts(batch.src, batch.dst, batch.t, batch.mask)
+    valid = jnp.sum(batch.mask)
+    return float(jnp.sum((cnt > 0) & batch.mask) / jnp.maximum(valid, 1))
+
+
+# ---------------------------------------------------------------------------
+# Per-node message reduction (batch-parallel memory update semantics)
+# ---------------------------------------------------------------------------
+
+
+def node_occurrences(batch: EventBatch):
+    """Flatten a batch into per-endpoint occurrences.
+
+    Returns (nodes (2b,), times (2b,), other (2b,), feat (2b,F), occ_mask)
+    where entry order is [all srcs, all dsts]."""
+    nodes = jnp.concatenate([batch.src, batch.dst])
+    other = jnp.concatenate([batch.dst, batch.src])
+    times = jnp.concatenate([batch.t, batch.t])
+    feat = jnp.concatenate([batch.feat, batch.feat], axis=0)
+    mask = jnp.concatenate([batch.mask, batch.mask])
+    return nodes, times, other, feat, mask
+
+
+def last_per_node(nodes, times, values, mask, num_nodes: int):
+    """Chronologically-LAST value per node (TGN aggregator): returns
+    (per_node_value (N,D), per_node_time (N,), touched (N,))."""
+    big = jnp.where(mask, times, -jnp.inf)
+    # sort by (node, time) and take the last entry of each node run
+    order = jnp.lexsort((big, nodes))
+    n_sorted = nodes[order]
+    is_last = jnp.concatenate([n_sorted[1:] != n_sorted[:-1],
+                               jnp.ones((1,), bool)])
+    take = is_last & mask[order]
+    idx = jnp.where(take, n_sorted, num_nodes)  # dump slot
+    out = jnp.zeros((num_nodes + 1, values.shape[-1]), values.dtype)
+    out = out.at[idx].set(values[order], mode="drop")
+    t_out = jnp.zeros((num_nodes + 1,), times.dtype)
+    t_out = t_out.at[idx].set(times[order], mode="drop")
+    touched = jnp.zeros((num_nodes + 1,), bool).at[idx].set(True, mode="drop")
+    return out[:num_nodes], t_out[:num_nodes], touched[:num_nodes]
+
+
+def mean_per_node(nodes, values, mask, num_nodes: int):
+    """Mean of messages per node (alternative aggregator)."""
+    idx = jnp.where(mask, nodes, num_nodes)
+    summed = jax.ops.segment_sum(values * mask[:, None], idx, num_segments=num_nodes + 1)
+    cnt = jax.ops.segment_sum(mask.astype(values.dtype), idx, num_segments=num_nodes + 1)
+    mean = summed / jnp.maximum(cnt[:, None], 1.0)
+    return mean[:num_nodes], (cnt[:num_nodes] > 0)
+
+
+# ---------------------------------------------------------------------------
+# Temporal neighbour ring buffers (for the EMBEDDING module)
+# ---------------------------------------------------------------------------
+
+
+def init_neighbors(n_nodes: int, k: int):
+    return {
+        "nbr": jnp.full((n_nodes, k), -1, jnp.int32),
+        "t": jnp.zeros((n_nodes, k), jnp.float32),
+        "ptr": jnp.zeros((n_nodes,), jnp.int32),
+    }
+
+
+NEIGHBOR_AXES = {"nbr": ("nodes", None), "t": ("nodes", None), "ptr": ("nodes",)}
+
+
+def update_neighbors(state, batch: EventBatch):
+    """Append each event's endpoints to each other's ring buffers. Multiple
+    same-node occurrences within the batch land in consecutive slots
+    (per-node rank via sort), preserving within-batch order."""
+    from repro.train import annotate
+    k = state["nbr"].shape[1]
+    n = state["nbr"].shape[0]
+    nodes, times, other, _, mask = node_occurrences(batch)
+    nodes, times = annotate.compact(nodes), annotate.compact(times)
+    other, mask = annotate.compact(other), annotate.compact(mask)
+    m = nodes.shape[0]
+    # rank of each occurrence within its node (in array order = time order)
+    order = jnp.argsort(jnp.where(mask, nodes, n), stable=True)
+    sorted_nodes = nodes[order]
+    start = jnp.searchsorted(sorted_nodes, jnp.arange(n + 1))
+    rank_sorted = jnp.arange(m) - start[sorted_nodes]
+    rank = jnp.zeros(m, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    slot = (state["ptr"][nodes] + rank) % k
+    flat = jnp.where(mask, nodes * k + slot, n * k)
+    nbr = state["nbr"].reshape(-1)
+    nbr = jnp.concatenate([nbr, jnp.zeros((1,), nbr.dtype)])
+    nbr = nbr.at[flat].set(other, mode="drop")[:-1].reshape(n, k)
+    tb = state["t"].reshape(-1)
+    tb = jnp.concatenate([tb, jnp.zeros((1,), tb.dtype)])
+    tb = tb.at[flat].set(times, mode="drop")[:-1].reshape(n, k)
+    counts = jax.ops.segment_sum(mask.astype(jnp.int32),
+                                 jnp.where(mask, nodes, n), num_segments=n + 1)[:n]
+    ptr = (state["ptr"] + counts) % k
+    return {"nbr": nbr, "t": tb, "ptr": ptr}

@@ -1,0 +1,36 @@
+"""Probes for the paper's theory: Theorem 1 (gradient variance vs temporal
+batch size) and Theorem 2 (convergence-rate constants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def epoch_gradient(epoch_fn, params, stream_batches, neg_key):
+    """Accumulate the full-epoch gradient sum_i grad L_i(theta^{(i-1)}) under
+    a specific negative-sampling key. `epoch_fn(params, batches, key)` must
+    return (grad_tree, aux). Used by benchmarks/variance.py."""
+    return epoch_fn(params, stream_batches, neg_key)
+
+
+def gradient_variance(grads: list) -> float:
+    """Empirical Var[grad L(theta)] over negative-sampling draws: mean squared
+    distance to the mean gradient, summed over leaves (Theorem 1 LHS)."""
+    flat = [np.concatenate([np.ravel(np.asarray(g)) for g in jax.tree.leaves(gr)])
+            for gr in grads]
+    stack = np.stack(flat)
+    mean = stack.mean(axis=0, keepdims=True)
+    return float(np.mean(np.sum((stack - mean) ** 2, axis=1)))
+
+
+def theorem1_lower_bound(n_events: int, batch_size: int, sigma_min_sq: float):
+    """(|E| / b) * sigma_min^2."""
+    return n_events / batch_size * sigma_min_sq
+
+
+def theorem2_bound(K: int, L: float, mu: float, loss_gap: float,
+                   sigma_max_sq: float, T: int):
+    """RHS of Eq. 6 (up to constants): convergence-rate estimate."""
+    return (2 * np.sqrt(K) * L * loss_gap / mu ** 2
+            + np.sqrt(K) * sigma_max_sq * np.log(max(T, 2))) / np.sqrt(T)

@@ -1,0 +1,99 @@
+"""Event-based dynamic graph representation (Sec. 3 of the paper).
+
+A dynamic graph is a node set V = {0..N-1} and a chronologically ordered
+stream of interaction events e_ij(t) with optional edge features. Events are
+stored as a struct-of-arrays `EventStream`; fixed-size `TemporalBatch`es are
+carved out for training (the paper's temporal batches B_1..B_K).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EventBatch:
+    """One temporal batch of events (positive or negative)."""
+    src: jnp.ndarray      # (b,) int32
+    dst: jnp.ndarray      # (b,) int32
+    t: jnp.ndarray        # (b,) float32
+    feat: jnp.ndarray     # (b, F) float32
+    mask: jnp.ndarray     # (b,) bool — False for padding
+
+    @property
+    def size(self) -> int:
+        return self.src.shape[0]
+
+
+@dataclasses.dataclass
+class EventStream:
+    """Full chronological stream (host-side, numpy)."""
+    src: np.ndarray
+    dst: np.ndarray
+    t: np.ndarray
+    feat: np.ndarray
+    num_nodes: int
+
+    def __len__(self) -> int:
+        return len(self.src)
+
+    @property
+    def feat_dim(self) -> int:
+        return self.feat.shape[1]
+
+    def slice(self, lo: int, hi: int) -> "EventStream":
+        return EventStream(self.src[lo:hi], self.dst[lo:hi], self.t[lo:hi],
+                           self.feat[lo:hi], self.num_nodes)
+
+    def chronological_split(self, train: float = 0.7, val: float = 0.15):
+        """Paper App. A: split [0,T] chronologically into train/val/test."""
+        n = len(self)
+        i1, i2 = int(n * train), int(n * (train + val))
+        return self.slice(0, i1), self.slice(i1, i2), self.slice(i2, n)
+
+    def temporal_batches(self, batch_size: int) -> list[EventBatch]:
+        """Partition into K = ceil(|E|/b) temporal batches (last one padded)."""
+        out = []
+        for lo in range(0, len(self), batch_size):
+            hi = min(lo + batch_size, len(self))
+            pad = batch_size - (hi - lo)
+            mk = lambda a: np.concatenate([a[lo:hi], np.zeros((pad,) + a.shape[1:],
+                                                              a.dtype)]) if pad else a[lo:hi]
+            out.append(EventBatch(
+                src=jnp.asarray(mk(self.src), jnp.int32),
+                dst=jnp.asarray(mk(self.dst), jnp.int32),
+                t=jnp.asarray(mk(self.t), jnp.float32),
+                feat=jnp.asarray(mk(self.feat), jnp.float32),
+                mask=jnp.asarray(np.arange(batch_size) < (hi - lo)),
+            ))
+        return out
+
+
+def load_jodie_csv(path: str, num_nodes: int | None = None) -> EventStream:
+    """Loader for the public JODIE dataset format:
+    user_id,item_id,timestamp,state_label,feature0,feature1,...
+    Items are offset into a bipartite id space after the users."""
+    src, dst, ts, feats = [], [], [], []
+    with open(path) as f:
+        header = f.readline()
+        for line in f:
+            parts = line.strip().split(",")
+            if len(parts) < 4:
+                continue
+            src.append(int(float(parts[0])))
+            dst.append(int(float(parts[1])))
+            ts.append(float(parts[2]))
+            feats.append([float(x) for x in parts[4:]] or [0.0])
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    n_users = src.max() + 1
+    dst = dst + n_users  # bipartite offset
+    feat = np.asarray(feats, np.float32)
+    n = num_nodes or int(max(src.max(), dst.max()) + 1)
+    order = np.argsort(np.asarray(ts), kind="stable")
+    return EventStream(src[order], dst[order],
+                       np.asarray(ts, np.float32)[order], feat[order], n)

@@ -1,0 +1,25 @@
+"""Negative event sampling (Assumption 1: unbiased, bounded variance).
+
+For each positive batch B_i we draw the negative set \bar B_i by corrupting
+destinations uniformly from the destination-node range — the standard MDGNN
+protocol (Rossi et al., 2021; Zhou et al., 2022)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.events import EventBatch
+
+
+def sample_negatives(key, batch: EventBatch, dst_lo: int, dst_hi: int,
+                     num: int | None = None) -> EventBatch:
+    n = num or batch.size
+    idx = jax.random.randint(key, (n,), 0, batch.size)
+    neg_dst = jax.random.randint(key, (n,), dst_lo, dst_hi)
+    return EventBatch(
+        src=batch.src[idx],
+        dst=neg_dst.astype(jnp.int32),
+        t=batch.t[idx],
+        feat=jnp.zeros((n, batch.feat.shape[1]), batch.feat.dtype),
+        mask=batch.mask[idx],
+    )

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a real TPU, `interpret=False` compiles to Mosaic; on this CPU container
+the kernels run in interpret mode (the kernel body executed in Python),
+which is how the tests validate them against the pure-jnp oracles in
+`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import gru_cell as _gru
+from repro.kernels import neighbor_attn as _nattn
+from repro.kernels import pres_filter as _pf
+from repro.kernels import ssd_chunk as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gru_cell(x, h, w, u, b, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _gru.gru_cell(x, h, w, u, b, **kw)
+
+
+def gru_cell_params(params, x, h, **kw):
+    """Adapter matching repro.models.modules.gru_cell(params, x, h)."""
+    return gru_cell(x, h, params["w"], params["u"], params["b"], **kw)
+
+
+def pres_filter(s_prev, s_meas, delta_mean, dt, gamma, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _pf.pres_filter(s_prev, s_meas, delta_mean, dt, gamma, **kw)
+
+
+def neighbor_attn(q, k, v, valid, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _nattn.neighbor_attn(q, k, v, valid, **kw)
+
+
+def ssd_chunk(q, k, v, lcum, h0, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _ssd.ssd_chunk(q, k, v, lcum, h0, **kw)
+
+
+def flash_attn(q, k, v, **kw):
+    from repro.kernels import flash_attn as _fa
+    kw.setdefault("interpret", _interpret_default())
+    return _fa.flash_attn(q, k, v, **kw)

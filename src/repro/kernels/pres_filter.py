@@ -1,0 +1,100 @@
+"""Fused PRES predict->correct->innovation Pallas kernel.
+
+The PRES filter is memory-bound elementwise work over the touched memory
+rows (Eqs. 7-9). Unfused, it is 6 separate HBM round trips (predict, clip,
+fuse, subtract, divide, write); this kernel does one read of
+(s_prev, s_meas, delta_mean, dt) and one write of (fused, delta_rate) per
+VMEM tile. The GMM gather (mixture mean per node) stays outside — gathers
+are XLA's job; the kernel takes the gathered rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _filter_kernel(s_prev_ref, s_meas_ref, dmean_ref, dt_ref, gamma_ref,
+                   fused_ref, delta_ref, *, clip):
+    s_prev = s_prev_ref[...].astype(jnp.float32)
+    s_meas = s_meas_ref[...].astype(jnp.float32)
+    dmean = dmean_ref[...].astype(jnp.float32)
+    dt = dt_ref[...].astype(jnp.float32)[:, None]
+    gamma = gamma_ref[0]
+    step = jnp.clip(dt * dmean, -clip, clip)
+    s_pred = s_prev + step
+    fused = (1.0 - gamma) * s_pred + gamma * s_meas
+    delta = (fused - s_pred) / jnp.maximum(dt, 1.0)
+    fused_ref[...] = fused.astype(fused_ref.dtype)
+    delta_ref[...] = delta.astype(delta_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "clip", "interpret"))
+def _pres_filter_pallas(s_prev, s_meas, delta_mean, dt, gamma, *,
+                        clip: float = 5.0, block_m: int = 256,
+                        interpret: bool = True):
+    """s_prev/s_meas/delta_mean: (M, D); dt: (M,); gamma: scalar.
+    Returns (fused (M, D), delta_rate (M, D))."""
+    m, d = s_prev.shape
+    pad_m = (-m) % block_m
+    if pad_m:
+        pad2 = lambda a: jnp.pad(a, ((0, pad_m), (0, 0)))
+        s_prev, s_meas, delta_mean = map(pad2, (s_prev, s_meas, delta_mean))
+        dt = jnp.pad(dt, (0, pad_m), constant_values=1.0)
+    mm = s_prev.shape[0]
+    gamma_arr = jnp.reshape(gamma.astype(jnp.float32), (1,))
+    fused, delta = pl.pallas_call(
+        functools.partial(_filter_kernel, clip=clip),
+        grid=(mm // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, d), s_prev.dtype),
+            jax.ShapeDtypeStruct((mm, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s_prev, s_meas, delta_mean, dt, gamma_arr)
+    return fused[:m], delta[:m]
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_filter(clip: float, block_m: int, interpret: bool):
+    """custom_vjp wrapper: Pallas forward, oracle backward. gamma is the
+    learnable Eq. 8 gate, so gradients must flow to it."""
+    from repro.kernels import ref
+
+    @jax.custom_vjp
+    def f(s_prev, s_meas, delta_mean, dt, gamma):
+        return _pres_filter_pallas(s_prev, s_meas, delta_mean, dt, gamma,
+                                   clip=clip, block_m=block_m,
+                                   interpret=interpret)
+
+    def fwd(s_prev, s_meas, delta_mean, dt, gamma):
+        return f(s_prev, s_meas, delta_mean, dt, gamma), \
+            (s_prev, s_meas, delta_mean, dt, gamma)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda *a: ref.pres_filter_ref(*a, clip=clip), *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def pres_filter(s_prev, s_meas, delta_mean, dt, gamma, *, clip: float = 5.0,
+                block_m: int = 256, interpret: bool = True):
+    """Differentiable fused PRES filter."""
+    return _diff_filter(clip, block_m, interpret)(s_prev, s_meas, delta_mean,
+                                                  dt, gamma)

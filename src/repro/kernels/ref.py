@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gru_cell_ref(x, h, w, u, b):
+    """x: (M, Din), h: (M, D), w: (Din, 3D), u: (D, 3D), b: (3D,)."""
+    gx = x @ w + b
+    gh = h @ u
+    d = h.shape[-1]
+    rx, zx, nx = gx[..., :d], gx[..., d:2 * d], gx[..., 2 * d:]
+    rh, zh, nh = gh[..., :d], gh[..., d:2 * d], gh[..., 2 * d:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1 - z) * h + z * n
+
+
+def pres_filter_ref(s_prev, s_meas, delta_mean, dt, gamma, clip=5.0):
+    """Fused predict (Eq. 7) -> correct (Eq. 8) -> innovation rate.
+    Returns (fused, delta_rate)."""
+    step = jnp.clip(dt[:, None] * delta_mean, -clip, clip)
+    s_pred = s_prev + step
+    fused = (1.0 - gamma) * s_pred + gamma * s_meas
+    delta = (fused - s_pred) / jnp.maximum(dt, 1.0)[:, None]
+    return fused, delta
+
+
+def neighbor_attn_ref(q, k, v, valid):
+    """TGN temporal neighbour attention.
+    q: (M, E), k/v: (M, K, E), valid: (M, K) bool -> (M, E)."""
+    scores = jnp.einsum("me,mke->mk", q, k) / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    probs = jnp.where(jnp.any(valid, -1, keepdims=True), probs, 0.0)
+    return jnp.einsum("mk,mke->me", probs.astype(q.dtype), v)
+
+
+def ssd_chunk_ref(q, k, v, lcum, h0):
+    """One SSD / mLSTM chunk (fp32).
+    q,k: (L,N), v: (L,P), lcum: (L,) inclusive cumulative log-decay,
+    h0: (N,P) carried state. Returns (y (L,P), h1 (N,P))."""
+    ltot = lcum[-1]
+    scores = q @ k.T                             # (L, L)
+    decay = lcum[:, None] - lcum[None, :]
+    mask = jnp.tril(jnp.ones(scores.shape, bool))
+    sdk = jnp.where(mask, scores * jnp.exp(decay), 0.0)
+    y = sdk @ v + (q * jnp.exp(lcum)[:, None]) @ h0
+    w = jnp.exp(ltot - lcum)
+    h1 = h0 * jnp.exp(ltot) + (k * w[:, None]).T @ v
+    return y, h1

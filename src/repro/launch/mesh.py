@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The single-pod mesh is (16, 16) = 256 chips ("data", "model"); the
+multi-pod mesh is (2, 16, 16) = 512 chips ("pod", "data", "model") — "pod"
+is a pure data-parallel / FSDP axis (gradients all-reduce over it).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh for CI-style dry-run tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count >= data*model*pod)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,284 @@
+"""Dry-run plumbing: abstract parameter/optimizer/batch specs, sharded
+train/prefill/decode step builders for every (arch x input-shape) pair.
+
+Nothing here allocates device memory: parameters come from jax.eval_shape,
+inputs are ShapeDtypeStructs, and the steps are lowered with explicit
+in_shardings/out_shardings derived from logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.archs.api import get_model
+from repro.archs.base import Model, ModelConfig
+from repro.configs import InputShape
+from repro.nn import module as module_lib
+from repro.optim import optimizers as opt_lib
+
+# Huge-MoE configs train with Adafactor (Adam moments would exceed HBM; see
+# EXPERIMENTS.md §Dry-run).
+ARCH_OPTIMIZER = {
+    "arctic-480b": "adafactor",
+    "kimi-k2-1t-a32b": "adafactor",
+    "command-r-plus-104b": "adafactor",
+}
+
+# >=10B-param archs shard the 'embed' dim of weights over the data axis
+# (FSDP) in addition to tensor parallelism.
+FSDP_ARCHS = {"arctic-480b", "kimi-k2-1t-a32b", "command-r-plus-104b",
+              "gemma3-12b"}
+
+# Dense FSDP archs get the explicit per-scan-step weight-gather constraint
+# (EXPERIMENTS.md §Perf pair 3: -77% / -38% collective). MoE archs are
+# EXCLUDED: their expert einsums don't route through layers.linear, and the
+# partial hook measurably hurts (arctic +61%, kimi +104%).
+WEIGHT_GATHER_ARCHS = {"gemma3-12b", "command-r-plus-104b"}
+
+
+def rules_for(arch_id: str, shape: InputShape, override: str | None = None):
+    if override:
+        return dict(module_lib.RULE_SETS[override])
+    if shape.kind == "decode" and shape.global_batch == 1:
+        rules = dict(module_lib.RULE_SETS["long_ctx"])
+        rules["batch"] = None
+        rules["cache_seq"] = ("data", "model")
+        return rules
+    if arch_id in FSDP_ARCHS:
+        return dict(module_lib.RULE_SETS["fsdp"])
+    return dict(module_lib.RULE_SETS["default"])
+
+
+@dataclasses.dataclass
+class LoweredSpec:
+    """Everything dryrun needs for one (arch, shape, mesh) pair."""
+    fn: Any                 # the jit-able python callable
+    args: tuple             # ShapeDtypeStructs / abstract values
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def abstract_init(model: Model, key=None):
+    """(param_shapes, axes) without allocating."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    holder = {}
+
+    def initp(k):
+        p, a = model.init(k)
+        holder["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(initp, key)
+    return shapes, holder["axes"]
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None), tuple))
+                                        for e in x)
+
+
+def shardings_from_axes(axes_tree, rules, mesh):
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, module_lib.logical_to_spec(ax, rules,
+                                                                  mesh.axis_names)),
+        axes_tree, is_leaf=_is_axes)
+
+
+def batch_spec(mesh, rules):
+    bs = module_lib.logical_to_spec(("batch", "seq"), rules, mesh.axis_names)
+    return NamedSharding(mesh, bs)
+
+
+def _axis_size(mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    n = 1
+    for a in mesh_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def vocab_rules(cfg: ModelConfig, rules, mesh):
+    """Logits leave the model sliced to the TRUE vocab (padding removed), so
+    the 'vocab' output dim is only shardable when cfg.vocab divides evenly
+    over the mesh axes (whisper's 51865 does not)."""
+    if cfg.vocab % _axis_size(mesh, rules.get("vocab")) != 0:
+        return dict(rules, vocab=None)
+    return rules
+
+
+def make_train_spec(cfg: ModelConfig, shape: InputShape, mesh,
+                    rules=None, optimizer: str | None = None) -> LoweredSpec:
+    model = get_model(cfg)
+    rules = rules or rules_for(cfg.arch_id, shape)
+    opt_name = optimizer or ARCH_OPTIMIZER.get(cfg.arch_id, "adamw")
+    opt = opt_lib.OPTIMIZERS[opt_name](1e-4)
+
+    param_shapes, axes = abstract_init(model)
+    opt_shapes = jax.eval_shape(opt.init, param_shapes)
+    opt_axes = opt.state_axes(axes)
+
+    p_shard = shardings_from_axes(axes, rules, mesh)
+    o_shard = shardings_from_axes(opt_axes, rules, mesh)
+    b_shard = batch_spec(mesh, rules)
+
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    batch_shardings = {"tokens": b_shard, "targets": b_shard}
+    if model.extra_inputs:
+        for k, v in model.extra_inputs(b, s).items():
+            batch[k] = v
+            spec = [("batch",) + (None,) * (len(v.shape) - 1)]
+            batch_shardings[k] = NamedSharding(
+                mesh, module_lib.logical_to_spec(spec[0], rules, mesh.axis_names))
+
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    weights_fn = (_fsdp_weights_hook(param_shapes, axes, rules, mesh)
+                  if cfg.arch_id in WEIGHT_GATHER_ARCHS else None)
+    if weights_fn is not None:
+        from repro.train import annotate
+        inner = train_step
+
+        def train_step(params, opt_state, batch):  # noqa: F811
+            # hook active during tracing: scan bodies re-shard their weight
+            # slices to spec-minus-data (explicit FSDP weight gather)
+            with annotate.install(weights_fn=weights_fn):
+                return inner(params, opt_state, batch)
+
+    return LoweredSpec(
+        fn=train_step,
+        args=(param_shapes, opt_shapes, batch),
+        in_shardings=(p_shard, o_shard, batch_shardings),
+        out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+    )
+
+
+def _fsdp_weights_hook(param_shapes, axes, rules, mesh):
+    """Weight-gather constraint for FSDP rule sets (rules mapping 'embed' to
+    a mesh axis). Returns a function leaf -> leaf with a
+    with_sharding_constraint of the leaf's spec WITHOUT the FSDP axis, keyed
+    by the (per-scan-iteration) leaf shape. GSPMD then all-gathers the
+    MB-scale layer weights inside the scan instead of all-reducing GB-scale
+    activations whose contraction dim FSDP split."""
+    fsdp_axis = rules.get("embed")
+    if fsdp_axis is None:
+        return None
+    no_fsdp = {k: (None if v == fsdp_axis else v) for k, v in rules.items()}
+    if not isinstance(param_shapes, dict):
+        return None
+    shape2sharding = {}
+    is_ax = _is_axes
+    for key, sub in param_shapes.items():
+        strip = 1 if key == "blocks" else 0  # scan slices drop the layer dim
+        for leaf, ax in zip(jax.tree.leaves(sub),
+                            jax.tree.leaves(axes[key], is_leaf=is_ax)):
+            if not isinstance(ax, tuple) or not leaf.shape:
+                continue
+            inner_shape = tuple(leaf.shape[strip:])
+            spec = module_lib.logical_to_spec(tuple(ax[strip:]), no_fsdp,
+                                              mesh.axis_names)
+            shape2sharding.setdefault(inner_shape, NamedSharding(mesh, spec))
+    if not shape2sharding:
+        return None
+
+    def weights_fn(x):
+        sh = shape2sharding.get(tuple(x.shape))
+        if sh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    return weights_fn
+
+
+def make_prefill_spec(cfg: ModelConfig, shape: InputShape, mesh,
+                      rules=None) -> LoweredSpec:
+    """Inference prefill: forward over the full prompt, produce logits for the
+    last position (sampling happens downstream)."""
+    model = get_model(cfg)
+    rules = rules or rules_for(cfg.arch_id, shape)
+    param_shapes, axes = abstract_init(model)
+    p_shard = shardings_from_axes(axes, rules, mesh)
+    b_shard = batch_spec(mesh, rules)
+
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    batch_shardings = {"tokens": b_shard}
+    if model.extra_inputs:
+        for k, v in model.extra_inputs(b, s).items():
+            batch[k] = v
+            batch_shardings[k] = NamedSharding(
+                mesh, module_lib.logical_to_spec(
+                    ("batch",) + (None,) * (len(v.shape) - 1), rules,
+                    mesh.axis_names))
+
+    def prefill(params, batch):
+        logits = model.forward(params, batch)
+        return logits[:, -1, :]
+
+    return LoweredSpec(
+        fn=prefill,
+        args=(param_shapes, batch),
+        in_shardings=(p_shard, batch_shardings),
+        out_shardings=NamedSharding(mesh, module_lib.logical_to_spec(
+            ("batch", "vocab"), vocab_rules(cfg, rules, mesh),
+            mesh.axis_names)),
+    )
+
+
+def make_decode_spec(cfg: ModelConfig, shape: InputShape, mesh,
+                     rules=None) -> LoweredSpec:
+    """serve_step: ONE new token against a cache/state of seq_len."""
+    model = get_model(cfg)
+    rules = rules or rules_for(cfg.arch_id, shape)
+    param_shapes, axes = abstract_init(model)
+    p_shard = shardings_from_axes(axes, rules, mesh)
+
+    b, s = shape.global_batch, shape.seq_len
+    state_shapes = jax.eval_shape(
+        functools.partial(model.init_decode_state, b, s))
+    st_axes = model.state_axes()
+    st_shard = shardings_from_axes(st_axes, rules, mesh)
+
+    tok_shard = NamedSharding(mesh, module_lib.logical_to_spec(
+        ("batch", None), rules, mesh.axis_names))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, state, tokens, pos):
+        logits, state = model.decode_step(params, state, tokens, pos)
+        return logits, state
+
+    return LoweredSpec(
+        fn=serve_step,
+        args=(param_shapes, state_shapes, tokens, pos),
+        in_shardings=(p_shard, st_shard, tok_shard, NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, module_lib.logical_to_spec(
+            ("batch", None, "vocab"), vocab_rules(cfg, rules, mesh),
+            mesh.axis_names)), st_shard),
+    )
+
+
+def make_spec(cfg: ModelConfig, shape: InputShape, mesh, rules=None,
+              optimizer: str | None = None) -> LoweredSpec:
+    if shape.kind == "train":
+        return make_train_spec(cfg, shape, mesh, rules, optimizer)
+    if shape.kind == "prefill":
+        return make_prefill_spec(cfg, shape, mesh, rules)
+    return make_decode_spec(cfg, shape, mesh, rules)

@@ -1,0 +1,327 @@
+"""Unified MDGNN engine (Eq. 1 / Alg. 1 / Alg. 2).
+
+The engine implements the shared MESSAGE -> MEMORY -> EMBEDDING pipeline with
+batch-parallel semantics (the paper's temporal-discontinuity regime), the
+sequential oracle (events processed one at a time — the "true" dynamics), and
+the PRES hooks. Model variants differ in their EMBEDDING module:
+
+    TGN   — temporal graph attention over the neighbour ring buffer
+    JODIE — time-projection embedding  h = (1 + dt*w) . s
+    APAN  — attention over a per-node mailbox of propagated messages
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batching, coherence, pres
+from repro.core.pres import PresState
+from repro.train import annotate
+from repro.graph.events import EventBatch
+from repro.models import modules
+from repro.models.modules import MemoryState
+from repro.nn.module import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class MDGNNConfig:
+    variant: str                 # tgn | jodie | apan
+    n_nodes: int
+    d_edge: int
+    d_mem: int = 100
+    d_msg: int = 100
+    d_time: int = 32
+    d_embed: int = 100
+    n_neighbors: int = 10
+    n_heads: int = 2
+    mailbox_size: int = 10       # APAN
+    memory_cell: str = "gru"
+    aggregator: str = "last"     # last | mean  (per-node message reduction)
+    # PRES
+    use_pres: bool = False       # prediction-correction filter (Sec. 5.1)
+    use_smoothing: bool | None = None  # Eq. 10 objective; None -> follow use_pres
+    beta: float = 0.1            # coherence-smoothing weight (Eq. 10)
+    delta_mode: str = "transition"   # transition (Alg. 2) | innovation (Eq. 9)
+    # Eq. 7 extrapolation scale: "count" scales the GMM delta by the node's
+    # pending-event count in the batch (the number of sequential memory
+    # transitions flattened into one — our TPU-era adaptation, measurably
+    # better); "time" is the paper-literal (t2 - t1) scaling.
+    pres_scale: str = "count"
+    pres_clip: float = 1.0       # |extrapolation| bound (memory is tanh-ish)
+    anchor_fraction: float = 1.0
+    # Sec. 5.3 anchor-set approximation, TPU-shaped: GMM trackers are kept
+    # for pres_buckets hash buckets (node -> node % pres_buckets) instead of
+    # per node. None -> exact per-node trackers. Cuts tracker state and its
+    # distributed-combine wire bytes by N/buckets (EXPERIMENTS.md §Perf).
+    pres_buckets: int | None = None
+    # bf16 memory table halves HBM + collective bytes for the table at
+    # production scale; compute stays fp32 (EXPERIMENTS.md §Perf iter. 6)
+    mem_dtype: str = "float32"
+    use_kernels: bool = False    # route GRU/filter through Pallas kernels
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: MDGNNConfig):
+    b = ParamBuilder(key, jnp.float32)
+    modules.time_encode_init(b, "time", cfg.d_time)
+    modules.message_init(b, "msg", cfg.d_mem, cfg.d_edge, cfg.d_time, cfg.d_msg)
+    cell_init, _ = modules.MEMORY_CELLS[cfg.memory_cell]
+    cell_init(b, "mem", cfg.d_msg, cfg.d_mem)
+    emb = b.sub("emb")
+    if cfg.variant == "tgn":
+        d = cfg.d_mem
+        emb.add("wq", (d, cfg.d_embed), ("embed", "mlp"))
+        emb.add("wk", (d + cfg.d_time, cfg.d_embed), ("embed", "mlp"))
+        emb.add("wv", (d + cfg.d_time, cfg.d_embed), ("embed", "mlp"))
+        emb.add("wo", (cfg.d_embed + d, cfg.d_embed), ("embed", "mlp"))
+    elif cfg.variant == "jodie":
+        emb.add("w_proj", (1, cfg.d_mem), (None, "embed"))
+        emb.add("w_out", (cfg.d_mem, cfg.d_embed), ("embed", "mlp"))
+    elif cfg.variant == "apan":
+        emb.add("wq", (cfg.d_mem, cfg.d_embed), ("embed", "mlp"))
+        emb.add("wk", (cfg.d_msg, cfg.d_embed), ("embed", "mlp"))
+        emb.add("wv", (cfg.d_msg, cfg.d_embed), ("embed", "mlp"))
+        emb.add("wo", (cfg.d_embed + cfg.d_mem, cfg.d_embed), ("embed", "mlp"))
+    else:
+        raise ValueError(cfg.variant)
+    dec = b.sub("dec")
+    dec.add("w1", (2 * cfg.d_embed, cfg.d_embed), ("embed", "mlp"))
+    dec.add("b1", (cfg.d_embed,), ("mlp",), init="zeros")
+    dec.add("w2", (cfg.d_embed, 1), ("mlp", None))
+    dec.add("b2", (1,), (None,), init="zeros")
+    node_cls = b.sub("node_cls")
+    node_cls.add("w1", (cfg.d_embed, cfg.d_embed), ("embed", "mlp"))
+    node_cls.add("b1", (cfg.d_embed,), ("mlp",), init="zeros")
+    node_cls.add("w2", (cfg.d_embed, 1), ("mlp", None))
+    node_cls.add("b2", (1,), (None,), init="zeros")
+    pres.pres_param_init(b, "pres")
+    return b.params, b.axes
+
+
+# ---------------------------------------------------------------------------
+# Runtime state
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: MDGNNConfig):
+    state = {
+        "memory": MemoryState.init(cfg.n_nodes, cfg.d_mem,
+                                   dtype=jnp.dtype(cfg.mem_dtype)),
+        "neighbors": batching.init_neighbors(cfg.n_nodes, cfg.n_neighbors),
+        "pres": PresState.init(cfg.pres_buckets or cfg.n_nodes, cfg.d_mem),
+    }
+    if cfg.variant == "apan":
+        state["mailbox"] = {
+            "msg": jnp.zeros((cfg.n_nodes, cfg.mailbox_size, cfg.d_msg), jnp.float32),
+            "t": jnp.zeros((cfg.n_nodes, cfg.mailbox_size), jnp.float32),
+            "ptr": jnp.zeros((cfg.n_nodes,), jnp.int32),
+        }
+    return state
+
+
+STATE_AXES: dict[str, Any] = {
+    "memory": modules.MEMORY_STATE_AXES,
+    "neighbors": batching.NEIGHBOR_AXES,
+    "pres": pres.PRES_STATE_AXES,
+    "mailbox": {"msg": ("nodes", None, "embed"), "t": ("nodes", None),
+                "ptr": ("nodes",)},
+}
+
+
+# ---------------------------------------------------------------------------
+# MESSAGE + MEMORY (batch-parallel semantics)
+# ---------------------------------------------------------------------------
+
+
+def compute_messages(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBatch):
+    """Messages for every endpoint occurrence ([srcs..., dsts...])."""
+    nodes, times, other, feat, mask = batching.node_occurrences(batch)
+    # pin gathered rows to the event axes (see repro.train.annotate)
+    s_self = annotate.events(mem.mem[nodes]).astype(jnp.float32)
+    s_other = annotate.events(mem.mem[other]).astype(jnp.float32)
+    dt = times - annotate.events(mem.last_update[nodes])
+    t_enc = modules.time_encode(params["time"], dt)
+    msgs = modules.message(params["msg"], s_self, s_other, feat, t_enc)
+    return nodes, times, msgs, mask
+
+
+def _last_occurrence_flags(nodes, times, mask):
+    """True for the chronologically-last valid occurrence of each node."""
+    m = nodes.shape[0]
+    big = jnp.where(mask, times, -jnp.inf)
+    order = jnp.lexsort((big, jnp.where(mask, nodes, jnp.iinfo(jnp.int32).max)))
+    n_sorted = nodes[order]
+    m_sorted = mask[order]
+    is_last_sorted = jnp.concatenate(
+        [(n_sorted[1:] != n_sorted[:-1]) | ~m_sorted[1:], jnp.ones((1,), bool)])
+    flags = jnp.zeros(m, bool).at[order].set(is_last_sorted & m_sorted)
+    return flags
+
+
+def memory_update(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBatch,
+                  gru_fn=None, defer_write: bool = False):
+    """Batch-parallel memory transition: ONE update per touched node (the
+    temporal-discontinuity semantics, Fig. 2(b) bottom). O(|B|) compute —
+    the memory cell runs on the 2b endpoint occurrences, and only the
+    selected (chronologically-last) occurrence per node is written back.
+
+    Returns (new_mem_state, info) where info carries the occurrence rows
+    needed by PRES and the coherence loss. With defer_write=True the mem
+    table write is skipped (PRES overwrites the same rows with the fused
+    values — writing twice costs a full extra scatter+combine at production
+    scale, EXPERIMENTS.md §Perf iteration 5)."""
+    nodes, times, msgs, mask = compute_messages(params, cfg, mem, batch)
+    if cfg.aggregator == "mean":
+        mean_n, _ = batching.mean_per_node(nodes, msgs, mask, cfg.n_nodes)
+        msgs = mean_n[nodes]  # every occurrence carries its node's mean message
+    selected = _last_occurrence_flags(nodes, times, mask)
+    h_prev = mem.mem[nodes].astype(jnp.float32)  # (2b, D)
+    _, cell = modules.MEMORY_CELLS[cfg.memory_cell]
+    if gru_fn is not None and cfg.memory_cell == "gru":
+        cell = gru_fn
+    new_rows = cell(params["mem"], msgs, h_prev)  # (2b, D)
+    # compact-update boundary (repro.train.annotate): replicate the (2b, D)
+    # update rows so the table scatter below is provably local under GSPMD
+    new_rows = annotate.compact(new_rows)
+    times = annotate.compact(times)
+    selected = annotate.compact(selected)
+    nodes = annotate.compact(nodes)
+    write_idx = jnp.where(selected, nodes, cfg.n_nodes)
+    if defer_write:
+        new_mem = mem.mem
+    else:
+        new_mem = jnp.concatenate([mem.mem, jnp.zeros((1, mem.mem.shape[1]),
+                                                      mem.mem.dtype)])
+        new_mem = new_mem.at[write_idx].set(
+            new_rows.astype(new_mem.dtype), mode="drop")[:-1]
+    new_t = jnp.concatenate([mem.last_update, jnp.zeros((1,), jnp.float32)])
+    new_t = new_t.at[write_idx].set(times, mode="drop")[:-1]
+    info = {
+        "nodes": nodes, "selected": selected, "mask": mask,
+        "s_prev": h_prev, "s_meas": new_rows,
+        "t_prev": mem.last_update[nodes], "t_now": times,
+        "msgs": msgs,
+    }
+    return MemoryState(mem=new_mem, last_update=new_t), info
+
+
+def sequential_memory_update(params, cfg: MDGNNConfig, mem: MemoryState,
+                             batch: EventBatch):
+    """Sequential oracle: events processed strictly one at a time (the
+    middle row of Fig. 2(b) — no temporal discontinuity)."""
+    _, cell = modules.MEMORY_CELLS[cfg.memory_cell]
+
+    def step(carry, ev):
+        m, lu = carry
+        src, dst, t, feat, mask = ev
+        pair = jnp.stack([src, dst])
+        other = jnp.stack([dst, src])
+        s_self = m[pair].astype(jnp.float32)
+        s_other = m[other].astype(jnp.float32)
+        dt = t - lu[pair]
+        t_enc = modules.time_encode(params["time"], dt)
+        msgs = modules.message(params["msg"], s_self, s_other,
+                               jnp.broadcast_to(feat, (2,) + feat.shape), t_enc)
+        new_rows = cell(params["mem"], msgs, s_self)
+        upd = jnp.where(mask, 1.0, 0.0)
+        m = m.at[pair].set(
+            (upd * new_rows + (1 - upd) * s_self).astype(m.dtype))
+        lu = lu.at[pair].set(jnp.where(mask, t, lu[pair]))
+        return (m, lu), None
+
+    (m, lu), _ = jax.lax.scan(
+        step, (mem.mem, mem.last_update),
+        (batch.src, batch.dst, batch.t, batch.feat, batch.mask))
+    return MemoryState(mem=m, last_update=lu)
+
+
+# ---------------------------------------------------------------------------
+# EMBEDDING modules
+# ---------------------------------------------------------------------------
+
+
+def embed_nodes(params, cfg: MDGNNConfig, state, nodes, t_query):
+    """Dynamic embeddings h_i(t) for the given node ids at query times."""
+    mem: MemoryState = state["memory"]
+    s = annotate.events(mem.mem[nodes]).astype(jnp.float32)
+    e = params["emb"]
+    if cfg.variant == "jodie":
+        dt = (t_query - annotate.events(mem.last_update[nodes]))[:, None]
+        proj = s * (1.0 + dt * e["w_proj"][0])
+        return jnp.tanh(proj @ e["w_out"])
+    if cfg.variant == "tgn":
+        nbrs = annotate.events(state["neighbors"]["nbr"][nodes])   # (M, K)
+        nbr_t = annotate.events(state["neighbors"]["t"][nodes])    # (M, K)
+        valid = nbrs >= 0
+        s_nbr = annotate.events(
+            mem.mem[jnp.maximum(nbrs, 0)]).astype(jnp.float32)  # (M, K, D)
+        dt = t_query[:, None] - nbr_t
+        t_enc = modules.time_encode(params["time"], dt)  # (M, K, d_time)
+        kv_in = jnp.concatenate([s_nbr, t_enc], axis=-1)
+        q = s @ e["wq"]                                  # (M, E)
+        k = kv_in @ e["wk"]
+        v = kv_in @ e["wv"]
+        scores = jnp.einsum("me,mke->mk", q, k) / jnp.sqrt(q.shape[-1])
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = jnp.where(jnp.any(valid, -1, keepdims=True), probs, 0.0)
+        agg = jnp.einsum("mk,mke->me", probs, v)
+        return jax.nn.relu(jnp.concatenate([agg, s], -1) @ e["wo"])
+    if cfg.variant == "apan":
+        mb = state["mailbox"]
+        msgs = annotate.events(mb["msg"][nodes])         # (M, Km, d_msg)
+        q = s @ e["wq"]
+        k = msgs @ e["wk"]
+        v = msgs @ e["wv"]
+        scores = jnp.einsum("me,mke->mk", q, k) / jnp.sqrt(q.shape[-1])
+        probs = jax.nn.softmax(scores, axis=-1)
+        agg = jnp.einsum("mk,mke->me", probs, v)
+        return jax.nn.relu(jnp.concatenate([agg, s], -1) @ e["wo"])
+    raise ValueError(cfg.variant)
+
+
+def update_mailbox(cfg: MDGNNConfig, mailbox, nodes, msgs, times, mask):
+    """APAN: append each occurrence's message to the node's own mailbox ring
+    (asynchronous propagation — endpoints receive each other's messages)."""
+    km = mailbox["msg"].shape[1]
+    n = mailbox["msg"].shape[0]
+    m = nodes.shape[0]
+    order = jnp.argsort(jnp.where(mask, nodes, n), stable=True)
+    sorted_nodes = nodes[order]
+    start = jnp.searchsorted(sorted_nodes, jnp.arange(n + 1))
+    rank_sorted = jnp.arange(m) - start[sorted_nodes]
+    rank = jnp.zeros(m, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    slot = (mailbox["ptr"][nodes] + rank) % km
+    flat = jnp.where(mask, nodes * km + slot, n * km)
+    buf = mailbox["msg"].reshape(-1, msgs.shape[-1])
+    buf = jnp.concatenate([buf, jnp.zeros((1, msgs.shape[-1]), buf.dtype)])
+    buf = buf.at[flat].set(msgs, mode="drop")[:-1].reshape(n, km, -1)
+    tb = mailbox["t"].reshape(-1)
+    tb = jnp.concatenate([tb, jnp.zeros((1,), tb.dtype)])
+    tb = tb.at[flat].set(times, mode="drop")[:-1].reshape(n, km)
+    counts = jax.ops.segment_sum(mask.astype(jnp.int32),
+                                 jnp.where(mask, nodes, n), num_segments=n + 1)[:n]
+    return {"msg": buf, "t": tb, "ptr": (mailbox["ptr"] + counts) % km}
+
+
+# ---------------------------------------------------------------------------
+# Decoders
+# ---------------------------------------------------------------------------
+
+
+def link_logits(params, h_src, h_dst):
+    x = jnp.concatenate([h_src, h_dst], axis=-1)
+    h = jax.nn.relu(x @ params["dec"]["w1"] + params["dec"]["b1"])
+    return (h @ params["dec"]["w2"] + params["dec"]["b2"])[..., 0]
+
+
+def node_logits(params, h):
+    hh = jax.nn.relu(h @ params["node_cls"]["w1"] + params["node_cls"]["b1"])
+    return (hh @ params["node_cls"]["w2"] + params["node_cls"]["b2"])[..., 0]

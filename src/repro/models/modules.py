@@ -1,0 +1,108 @@
+"""MDGNN building blocks: time encoding, MESSAGE, MEMORY (GRU/RNN) modules.
+
+All stateless-functional; the memory table itself lives in `MemoryState`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamBuilder
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MemoryState:
+    mem: jnp.ndarray          # (N, D) — the memory table S (fp32 or bf16)
+    last_update: jnp.ndarray  # (N,) fp32 — time of last memory write
+
+    @staticmethod
+    def init(n_nodes: int, d_mem: int, dtype=jnp.float32) -> "MemoryState":
+        """dtype=bf16 halves the table's HBM and collective footprint at
+        production scale; compute stays fp32 (rows upcast at gather)."""
+        return MemoryState(mem=jnp.zeros((n_nodes, d_mem), dtype),
+                           last_update=jnp.zeros((n_nodes,), jnp.float32))
+
+
+MEMORY_STATE_AXES = MemoryState(mem=("nodes", "embed"), last_update=("nodes",))
+
+
+# ---------------------------------------------------------------------------
+# Time encoding (Bochner / TGAT cosine features)
+# ---------------------------------------------------------------------------
+
+
+def time_encode_init(b: ParamBuilder, name: str, d_time: int):
+    sub = b.sub(name)
+    # log-spaced init like TGAT
+    sub.add("w", (d_time,), (None,), init="normal", scale=1.0)
+    sub.add("b", (d_time,), (None,), init="zeros")
+
+
+def time_encode(params, dt):
+    """dt: (...,) -> (..., d_time)."""
+    ang = dt[..., None] * params["w"] + params["b"]
+    return jnp.cos(ang)
+
+
+# ---------------------------------------------------------------------------
+# MESSAGE module: m = MLP([s_u, s_v, e_feat, phi(dt)])
+# ---------------------------------------------------------------------------
+
+
+def message_init(b: ParamBuilder, name: str, d_mem: int, d_edge: int,
+                 d_time: int, d_msg: int):
+    sub = b.sub(name)
+    d_in = 2 * d_mem + d_edge + d_time
+    sub.add("w1", (d_in, d_msg), ("embed", "mlp"))
+    sub.add("b1", (d_msg,), ("mlp",), init="zeros")
+    sub.add("w2", (d_msg, d_msg), ("mlp", "mlp"))
+    sub.add("b2", (d_msg,), ("mlp",), init="zeros")
+
+
+def message(params, s_self, s_other, e_feat, t_enc):
+    x = jnp.concatenate([s_self, s_other, e_feat, t_enc], axis=-1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# MEMORY module: GRU / RNN cell over (touched-nodes, d)
+# ---------------------------------------------------------------------------
+
+
+def gru_init(b: ParamBuilder, name: str, d_in: int, d_hidden: int):
+    sub = b.sub(name)
+    sub.add("w", (d_in, 3 * d_hidden), ("embed", "mlp"))
+    sub.add("u", (d_hidden, 3 * d_hidden), ("embed", "mlp"))
+    sub.add("b", (3 * d_hidden,), ("mlp",), init="zeros")
+
+
+def gru_cell(params, x, h):
+    """x: (B, d_in), h: (B, d_hidden) -> new h. Reference (pure-jnp) path;
+    the Pallas kernel in repro.kernels.gru_cell fuses this on TPU."""
+    gx = x @ params["w"] + params["b"]
+    gh = h @ params["u"]
+    d = h.shape[-1]
+    rx, zx, nx = gx[..., :d], gx[..., d:2 * d], gx[..., 2 * d:]
+    rh, zh, nh = gh[..., :d], gh[..., d:2 * d], gh[..., 2 * d:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1 - z) * h + z * n
+
+
+def rnn_init(b: ParamBuilder, name: str, d_in: int, d_hidden: int):
+    sub = b.sub(name)
+    sub.add("w", (d_in, d_hidden), ("embed", "mlp"))
+    sub.add("u", (d_hidden, d_hidden), ("embed", "mlp"))
+    sub.add("b", (d_hidden,), ("mlp",), init="zeros")
+
+
+def rnn_cell(params, x, h):
+    return jnp.tanh(x @ params["w"] + h @ params["u"] + params["b"])
+
+
+MEMORY_CELLS = {"gru": (gru_init, gru_cell), "rnn": (rnn_init, rnn_cell)}

@@ -1,0 +1,1 @@
+"""Transformer substrate layers."""

@@ -1,0 +1,334 @@
+"""GQA attention with RoPE / M-RoPE, qk-norm, QKV bias, sliding windows and
+KV-cache prefill / single-token decode.
+
+Projection weights are stored 2-D with a fused (n_heads * d_head) output dim
+so the tensor-parallel "heads" logical axis shards evenly even when the raw
+head count (56, 28, 12, 4 in the assigned archs) does not divide the 16-way
+model axis; activations are reshaped to (B, S, H, D) inside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import rmsnorm, rmsnorm_init
+from repro.nn.module import ParamBuilder
+from repro.train import annotate
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, sections: tuple[int, ...],
+                theta: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL). positions: (B, 3, S) for (t, h, w);
+    sections: per-modality frequency-band sizes summing to head_dim/2."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles_all = positions[..., None].astype(jnp.float32) * freqs  # (B,3,S,d/2)
+    parts = []
+    start = 0
+    for m, sec in enumerate(sections):
+        parts.append(angles_all[:, m, :, start:start + sec])
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)  # (B,S,d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameterisation
+# ---------------------------------------------------------------------------
+
+
+def attention_init(
+    b: ParamBuilder,
+    name: str,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    out_bias: bool = False,
+):
+    sub = b.sub(name)
+    sub.add("wq", (d_model, n_heads * d_head), ("embed", "heads"))
+    sub.add("wk", (d_model, n_kv_heads * d_head), ("embed", "heads"))
+    sub.add("wv", (d_model, n_kv_heads * d_head), ("embed", "heads"))
+    sub.add("wo", (n_heads * d_head, d_model), ("heads", "embed"))
+    if qkv_bias:
+        sub.add("bq", (n_heads * d_head,), ("heads",), init="zeros")
+        sub.add("bk", (n_kv_heads * d_head,), ("heads",), init="zeros")
+        sub.add("bv", (n_kv_heads * d_head,), ("heads",), init="zeros")
+    if out_bias:
+        sub.add("bo", (d_model,), ("embed",), init="zeros")
+    if qk_norm:
+        rmsnorm_init(sub, "q_norm", d_head, axis="head_dim")
+        rmsnorm_init(sub, "k_norm", d_head, axis="head_dim")
+
+
+def _project_qkv(params, xq, xkv, d_head: int):
+    dt = xq.dtype
+    b_, s, _ = xq.shape
+    t = xkv.shape[1]
+    q = (xq @ annotate.weights(params["wq"].astype(dt)))
+    k = (xkv @ annotate.weights(params["wk"].astype(dt)))
+    v = (xkv @ annotate.weights(params["wv"].astype(dt)))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(b_, s, -1, d_head)
+    k = k.reshape(b_, t, -1, d_head)
+    v = v.reshape(b_, t, -1, d_head)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def _out_proj(params, out, dtype):
+    b_, s = out.shape[:2]
+    y = out.reshape(b_, s, -1) @ annotate.weights(params["wo"].astype(dtype))
+    if "bo" in params:
+        y = y + params["bo"].astype(dtype)
+    return y
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,D), k: (B,T,KV,D) -> scores (B,KV,G,S,T) in fp32."""
+    b_, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b_, s, kv, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+
+
+def _gqa_out(probs, v, dtype):
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    b_, s, kv, g, d = out.shape
+    return out.reshape(b_, s, kv * g, d).astype(dtype)
+
+
+def causal_mask(s: int, t: int, offset: int = 0, window: int | None = None):
+    qpos = offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (online-softmax) attention — the flash-attention pattern at the
+# XLA level. Never materialises the (S, S) score matrix: q is processed in
+# chunks via lax.map, kv in chunks via lax.scan with running (max, denom,
+# acc) statistics. Peak live score block is (B, KV, G, qc, kc) fp32 —
+# ~1 GB/device at the 32k prefill shapes instead of ~1 TB dense
+# (EXPERIMENTS.md §Perf, arctic-480b x prefill_32k).
+# On real TPUs the same tiling maps onto a Pallas kernel; the lax version is
+# the portable implementation the dry-run lowers.
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int | None,
+                        softmax_scale_cap: float | None,
+                        q_chunk: int = 2048, kv_chunk: int = 1024):
+    """q: (B,S,H,D), k/v: (B,T,KV,D) -> (B,S,H,D) in q.dtype."""
+    b_, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    assert s % q_chunk == 0 and t % kv_chunk == 0, (s, t, q_chunk, kv_chunk)
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qs = q.reshape(b_, nq, q_chunk, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    def one_q_chunk(args):
+        iq, qc = args  # qc: (B, qc, KV, G, D)
+        q_pos = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ik * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ik * kv_chunk, kv_chunk, 1)
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * scale
+            if softmax_scale_cap is not None:
+                sc = jnp.tanh(sc / softmax_scale_cap) * softmax_scale_cap
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk)
+            valid = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                valid &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                valid &= k_pos[None, :] > q_pos[:, None] - window
+            sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bkgqt,btkd->bkgqd", p,
+                                    vc.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b_, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b_, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b_, kv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,KV,G,qc,D)
+        return out.transpose(0, 3, 1, 2, 4)            # (B,qc,KV,G,D)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.arange(nq), qs))  # (nq,B,qc,KV,G,D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b_, s, h, d)
+    return out.astype(q.dtype)
+
+
+def attention(
+    params,
+    x,
+    positions,
+    *,
+    d_head: int,
+    causal: bool = True,
+    window: int | None = None,
+    rope_theta: float | None = 10000.0,
+    mrope_sections: tuple[int, ...] | None = None,
+    mrope_positions=None,
+    softmax_scale_cap: float | None = None,
+    attn_mask=None,
+    chunk: int | None = None,
+):
+    """Full-sequence (training / prefill) attention. x: (B,S,d).
+
+    chunk: when set and S is long enough, use blockwise online-softmax
+    attention (peak memory O(S * chunk) instead of O(S^2))."""
+    q, k, v = _project_qkv(params, x, x, d_head)
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, mrope_positions, mrope_sections, rope_theta)
+    elif positions is not None and rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    s = x.shape[1]
+    if (chunk is not None and attn_mask is None and s >= 2 * chunk
+            and s % chunk == 0):
+        out = blockwise_attention(q, k, v, causal=causal, window=window,
+                                  softmax_scale_cap=softmax_scale_cap,
+                                  q_chunk=chunk, kv_chunk=max(chunk // 2, 128))
+        return _out_proj(params, out, x.dtype)
+    scores = _gqa_scores(q, k)
+    if softmax_scale_cap is not None:  # logit soft-capping (gemma-style)
+        scores = jnp.tanh(scores / softmax_scale_cap) * softmax_scale_cap
+    if causal:
+        mask = causal_mask(s, s, window=window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if attn_mask is not None:
+        scores = jnp.where(attn_mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, x.dtype)
+    return _out_proj(params, out, x.dtype)
+
+
+def cross_attention(params, x, kv_src, *, d_head: int, src_mask=None):
+    """Encoder-decoder cross attention. kv from kv_src (B,T,d)."""
+    q, k, v = _project_qkv(params, x, kv_src, d_head)
+    scores = _gqa_scores(q, k)
+    if src_mask is not None:
+        scores = jnp.where(src_mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, x.dtype)
+    return _out_proj(params, out, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache — decode path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, cache_len: int, n_kv: int, d_head: int, dtype=jnp.bfloat16):
+    shape = (batch, cache_len, n_kv, d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+CACHE_AXES = {
+    "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+}
+
+
+def decode_attention(
+    params,
+    x,
+    cache,
+    pos,
+    *,
+    d_head: int,
+    window: int | None = None,
+    rope_theta: float | None = 10000.0,
+    mrope_sections=None,
+    mrope_positions=None,
+    softmax_scale_cap: float | None = None,
+):
+    """One-token decode. x: (B,1,d); pos: scalar int32.
+
+    For windowed layers the cache is a ring buffer of size `window`; write
+    slot = pos % cache_len. Returns (y, new_cache).
+    """
+    b_, s, _ = x.shape
+    assert s == 1
+    q, k, v = _project_qkv(params, x, x, d_head)
+    posv = jnp.full((b_, 1), pos, dtype=jnp.int32)
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, mrope_positions, mrope_sections, rope_theta)
+    elif rope_theta is not None:
+        q = apply_rope(q, posv, rope_theta)
+        k = apply_rope(k, posv, rope_theta)
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    scores = _gqa_scores(q, ck)  # (B,KV,G,1,T)
+    if softmax_scale_cap is not None:
+        scores = jnp.tanh(scores / softmax_scale_cap) * softmax_scale_cap
+    kpos = jnp.arange(cache_len)
+    if window is not None:
+        # ring buffer: slot j holds absolute position pos - ((slot - j) mod L)
+        abs_pos = pos - jnp.mod(slot - kpos, cache_len)
+        valid = (abs_pos >= jnp.maximum(0, pos - window + 1)) & (abs_pos <= pos)
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, cv, x.dtype)
+    return _out_proj(params, out, x.dtype), {"k": ck, "v": cv}

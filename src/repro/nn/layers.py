@@ -1,0 +1,133 @@
+"""Core layers: norms, linear, embedding, (G)MLU MLPs — functional style."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import annotate
+
+from repro.nn.module import ParamBuilder
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(b: ParamBuilder, name: str, dim: int, axis: str = "embed"):
+    sub = b.sub(name)
+    sub.add("scale", (dim,), (axis,), init="ones")
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + 0.0)
+            * annotate.weights(params["scale"]).astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(b: ParamBuilder, name: str, dim: int, axis: str = "embed"):
+    sub = b.sub(name)
+    sub.add("scale", (dim,), (axis,), init="ones")
+    sub.add("bias", (dim,), (axis,), init="zeros")
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * annotate.weights(params["scale"])
+            + annotate.weights(params["bias"])).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding
+# ---------------------------------------------------------------------------
+
+
+def linear_init(
+    b: ParamBuilder,
+    name: str,
+    in_dim: int,
+    out_dim: int,
+    in_axis: str = "embed",
+    out_axis: str = "mlp",
+    bias: bool = False,
+    scale: float | None = None,
+):
+    sub = b.sub(name)
+    sub.add("w", (in_dim, out_dim), (in_axis, out_axis), scale=scale)
+    if bias:
+        sub.add("b", (out_dim,), (out_axis,), init="zeros")
+
+
+def linear(params, x, dtype=None):
+    w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ annotate.weights(w)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def embedding_init(b: ParamBuilder, name: str, vocab: int, dim: int, scale=None):
+    sub = b.sub(name)
+    sub.add("table", (vocab, dim), ("vocab", "embed"), init="embed",
+            scale=scale if scale is not None else dim ** -0.5)
+
+
+def embed(params, ids, dtype=None):
+    table = annotate.weights(params["table"])
+    if dtype is not None:
+        table = table.astype(dtype)
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(params, x):
+    """Tied logits: x @ table^T (fp32 accumulation)."""
+    table = annotate.weights(params["table"])
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN) — optionally gated (SwiGLU/GeGLU)
+# ---------------------------------------------------------------------------
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def mlp_init(b: ParamBuilder, name: str, d_model: int, d_ff: int,
+             gated: bool = True, bias: bool = False):
+    sub = b.sub(name)
+    sub.add("wi", (d_model, d_ff), ("embed", "mlp"))
+    if gated:
+        sub.add("wg", (d_model, d_ff), ("embed", "mlp"))
+    sub.add("wo", (d_ff, d_model), ("mlp", "embed"))
+    if bias:
+        sub.add("bi", (d_ff,), ("mlp",), init="zeros")
+        sub.add("bo", (d_model,), ("embed",), init="zeros")
+
+
+def mlp(params, x, act: str = "silu"):
+    act_fn = ACTS[act]
+    h = x @ annotate.weights(params["wi"].astype(x.dtype))
+    if "bi" in params:
+        h = h + params["bi"].astype(x.dtype)
+    if "wg" in params:
+        h = act_fn(x @ annotate.weights(params["wg"].astype(x.dtype))) * h
+    else:
+        h = act_fn(h)
+    y = h @ annotate.weights(params["wo"].astype(x.dtype))
+    if "bo" in params:
+        y = y + params["bo"].astype(x.dtype)
+    return y

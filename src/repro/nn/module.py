@@ -1,0 +1,211 @@
+"""Minimal functional parameter system with logical-axis sharding metadata.
+
+No flax/haiku in this container — parameters are nested dicts of jax arrays,
+with a *parallel* tree of logical-axis tuples (one entry per array dim).
+Logical axes are resolved to mesh axes through a rule table, producing
+``jax.sharding.PartitionSpec`` trees for pjit in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Accumulates (params, logical_axes) trees under hierarchical names."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def sub(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder(self.next_key(), self.dtype)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+    def add(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[str | None],
+        init: str = "normal",
+        scale: float | None = None,
+        dtype=None,
+    ) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.dtype
+        key = self.next_key()
+        if init == "zeros":
+            value = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, dtype)
+        elif init == "normal":
+            # fan-in scaled truncated-normal-ish init
+            fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+            std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            value = (jax.random.normal(key, shape) * std).astype(dtype)
+        elif init == "embed":
+            std = scale if scale is not None else 1.0
+            value = (jax.random.normal(key, shape) * std).astype(dtype)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        self.params[name] = value
+        self.axes[name] = tuple(axes)
+
+
+def stack_params(trees: Sequence[Pytree], axes_tree: Pytree, layer_axis: str = "layers"):
+    """Stack per-layer param trees on a new leading 'layers' dim."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *trees)
+    new_axes = jax.tree.map(
+        lambda ax: (layer_axis, *ax),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return stacked, new_axes
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis resolution
+# ---------------------------------------------------------------------------
+
+# Default rule table; order matters only for documentation. Values may be a
+# mesh-axis name, a tuple of names, or None (replicated).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "event": ("pod", "data"),
+    "seq": None,
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "nodes": ("pod", "data"),
+    "cache_seq": None,
+}
+
+# FSDP rule-set: additionally shard the 'embed' dim of big weights across the
+# data axis (ZeRO-3 style); GSPMD all-gathers at use sites.
+FSDP_RULES = dict(DEFAULT_RULES, embed="data")
+
+# Sequence-parallel decode for long_500k (batch=1): shard KV cache over model.
+LONG_CTX_RULES = dict(DEFAULT_RULES, cache_seq="model")
+
+# MDGNN hillclimb variant: replicate the memory table / trackers (reads
+# become local; writes still all-reduce) — EXPERIMENTS.md §Perf iteration 1.
+MDGNN_REPLICATED_RULES = dict(DEFAULT_RULES, nodes=None)
+
+# MDGNN hillclimb iteration 3 (EXPERIMENTS.md §Perf): MDGNN params are
+# KB-scale, so tensor-parallelism over 'model' only forces activation
+# all-gathers of million-row per-occurrence tensors around every matmul.
+# Replicate ALL params and spend the model axis as extra event/data
+# parallelism instead (256-way).
+MDGNN_EVENT_DP_RULES = dict(
+    DEFAULT_RULES,
+    embed=None, mlp=None, vocab=None, heads=None, expert=None,
+    batch=("pod", "data", "model"),
+    event=("pod", "data", "model"),
+    nodes=("pod", "data", "model"),
+)
+
+# Iteration 4: replicate the STATE tables as well — gathers (memory rows,
+# neighbour buffers) become local, and autodiff accumulates all table
+# cotangents into a single table-sized all-reduce.
+MDGNN_EVENT_DP_REPL_RULES = dict(MDGNN_EVENT_DP_RULES, nodes=None)
+
+RULE_SETS: dict[str, dict[str, Any]] = {
+    "default": DEFAULT_RULES,
+    "fsdp": FSDP_RULES,
+    "long_ctx": LONG_CTX_RULES,
+    "mdgnn_replicated": MDGNN_REPLICATED_RULES,
+    "mdgnn_event_dp": MDGNN_EVENT_DP_RULES,
+    "mdgnn_event_dp_repl": MDGNN_EVENT_DP_REPL_RULES,
+}
+
+
+def logical_to_spec(
+    axes: Sequence[str | None] | None,
+    rules: Mapping[str, Any],
+    mesh_axis_names: Sequence[str],
+) -> P:
+    """Resolve a tuple of logical axis names to a PartitionSpec.
+
+    Mesh axes may be used at most once per spec; later collisions fall back to
+    replication for that dim.
+    """
+    if axes is None:
+        return P()
+    used: set[str] = set()
+    out = []
+    for ax in axes:
+        entry = rules.get(ax) if ax is not None else None
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in mesh_axis_names and n not in used)
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            used.add(names[0])
+            out.append(names[0])
+        else:
+            used.update(names)
+            out.append(names)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(axes_tree: Pytree, rules: Mapping[str, Any], mesh) -> Pytree:
+    names = mesh.axis_names
+    return jax.tree.map(
+        lambda ax: logical_to_spec(ax, rules, names),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(axes_tree: Pytree, rules: Mapping[str, Any], mesh) -> Pytree:
+    from jax.sharding import NamedSharding
+
+    specs = tree_specs(axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(params: Pytree) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def cast_tree(params: Pytree, dtype) -> Pytree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params
+    )

@@ -1,0 +1,101 @@
+"""Token-dropping top-k Mixture-of-Experts with sort-based dispatch.
+
+FLOP-faithful on the roofline: dispatch/combine are gathers/scatters
+(memory-bound), expert compute is a grouped einsum (E, C, d) x (E, d, f)
+whose HLO FLOPs equal the *active* expert FLOPs — unlike dense one-hot
+dispatch which inflates HLO FLOPs by E/k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import ACTS
+from repro.nn.module import ParamBuilder
+
+
+def moe_init(
+    b: ParamBuilder,
+    name: str,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    gated: bool = True,
+):
+    sub = b.sub(name)
+    sub.add("router", (d_model, n_experts), ("embed", "expert"))
+    sub.add("wi", (n_experts, d_model, d_ff), ("expert", "embed", "expert_mlp"))
+    if gated:
+        sub.add("wg", (n_experts, d_model, d_ff), ("expert", "embed", "expert_mlp"))
+    sub.add("wo", (n_experts, d_ff, d_model), ("expert", "expert_mlp", "embed"))
+
+
+def _topk_route(logits, k):
+    """softmax -> top-k -> renormalise. logits: (T, E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topp, topi = jax.lax.top_k(probs, k)  # (T,k)
+    topp = topp / jnp.sum(topp, axis=-1, keepdims=True)
+    return topp, topi, probs
+
+
+def moe(
+    params,
+    x,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+):
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    b_, s, d = x.shape
+    t = b_ * s
+    xt = x.reshape(t, d)
+    n_experts = params["router"].shape[-1]
+    logits = xt.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    topp, topi, probs = _topk_route(logits, top_k)
+
+    # --- load balance auxiliary (Switch-style) -----------------------------
+    me = jnp.mean(probs, axis=0)  # (E,)
+    one_hot_top1 = jax.nn.one_hot(topi[:, 0], n_experts, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux_loss = n_experts * jnp.sum(me * ce)
+
+    # --- capacity & slot assignment ----------------------------------------
+    capacity = int(max(1, round(t * top_k / n_experts * capacity_factor)))
+    flat_e = topi.reshape(-1)  # (T*k,)
+    # position of each assignment within its expert, in token order:
+    # rank = (# earlier assignments to same expert). Computed via sort.
+    tk = t * top_k
+    order = jnp.argsort(flat_e, stable=True)  # (T*k,)
+    sorted_e = flat_e[order]
+    # index within sorted run of equal expert ids:
+    start_of_expert = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    rank_sorted = jnp.arange(tk) - start_of_expert[sorted_e]
+    rank = jnp.zeros(tk, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < capacity
+    dest = jnp.where(keep, flat_e * capacity + rank, n_experts * capacity)  # drop slot
+
+    # --- dispatch: scatter tokens into (E*C+1, d) ---------------------------
+    src_token = jnp.repeat(jnp.arange(t), top_k)  # (T*k,)
+    gathered = xt[src_token]  # (T*k, d)
+    slots = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    slots = slots.at[dest].set(gathered.astype(x.dtype), mode="drop")
+    expert_in = slots[: n_experts * capacity].reshape(n_experts, capacity, d)
+
+    # --- expert compute ------------------------------------------------------
+    act_fn = ACTS[act]
+    h = jnp.einsum("ecd,edf->ecf", expert_in, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        g = jnp.einsum("ecd,edf->ecf", expert_in, params["wg"].astype(x.dtype))
+        h = act_fn(g) * h
+    else:
+        h = act_fn(h)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(x.dtype))
+
+    # --- combine: gather back, weight, sum over k ---------------------------
+    flat_out = expert_out.reshape(n_experts * capacity, d)
+    flat_out = jnp.concatenate([flat_out, jnp.zeros((1, d), flat_out.dtype)], 0)
+    per_assign = flat_out[dest]  # (T*k, d) — dropped slots read zeros
+    w = (topp.reshape(-1) * keep).astype(x.dtype)
+    combined = jax.ops.segment_sum(per_assign * w[:, None], src_token, num_segments=t)
+    return combined.reshape(b_, s, d), aux_loss

@@ -1,0 +1,196 @@
+"""State-space / linear-recurrence substrate.
+
+`chunked_linear_rnn` implements the chunked (SSD-style) algorithm for the
+recurrence
+
+    H_t = a_t * H_{t-1} + k_t v_t^T          (H: N x P matrix state per head)
+    y_t = q_t^T H_t
+
+which covers Mamba2 (q=C, k=dt*B, v=x, a=exp(-exp(A_log) dt)) and mLSTM
+(q, k, v projections; a = forget gate). Intra-chunk work is quadratic in the
+chunk length (MXU-friendly matmuls); inter-chunk state is carried by a
+`lax.scan` — sub-quadratic in sequence length, O(1)-state decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ParamBuilder
+
+LOG_EPS = -30.0
+
+
+def chunked_linear_rnn(q, k, v, log_a, *, chunk: int = 256, init_state=None):
+    """q,k: (B,S,H,N); v: (B,S,H,P); log_a: (B,S,H) (log of decay in (0,1]).
+
+    Returns y: (B,S,H,P), final_state: (B,H,N,P).
+    """
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        zq = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v = zq(q), zq(k), zq(v)
+        log_a = jnp.pad(log_a, [(0, 0), (0, pad), (0, 0)])
+    nc = q.shape[1] // chunk
+    resh = lambda x: x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, lac = resh(q), resh(k), resh(v), resh(log_a)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def body(h0, inp):
+        qq, kk, vv, la = inp  # (B,L,H,*)
+        qq = qq.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vv = vv.astype(jnp.float32)
+        la = la.astype(jnp.float32)
+        lcum = jnp.cumsum(la, axis=1)  # (B,L,H) inclusive
+        ltot = lcum[:, -1]  # (B,H)
+        # intra-chunk: scores S_lm = <q_l, k_m> * exp(lcum_l - lcum_m), m<=l
+        scores = jnp.einsum("blhn,bmhn->bhlm", qq, kk)
+        decay = lcum.transpose(0, 2, 1)[:, :, :, None] - lcum.transpose(0, 2, 1)[:, :, None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(mask[None, None], decay, LOG_EPS)
+        y_intra = jnp.einsum("bhlm,bmhp->blhp", scores * jnp.exp(decay), vv)
+        # carry-in contribution
+        y_carry = jnp.einsum("blhn,bhnp->blhp", qq * jnp.exp(lcum)[..., None], h0)
+        # state update
+        w = jnp.exp(ltot[:, None] - lcum)  # (B,L,H)
+        hc = jnp.einsum("blhn,blhp->bhnp", kk * w[..., None], vv)
+        h1 = h0 * jnp.exp(ltot)[..., None, None] + hc
+        return h1, y_intra + y_carry
+
+    final, ys = jax.lax.scan(body, init_state, (qc, kc, vc, lac))
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, final
+
+
+def linear_rnn_step(state, q, k, v, log_a):
+    """One decode step. state: (B,H,N,P); q,k: (B,H,N); v: (B,H,P)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    return state, y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(
+    b: ParamBuilder,
+    name: str,
+    d_model: int,
+    d_state: int,
+    *,
+    expand: int = 2,
+    head_dim: int = 64,
+    conv_width: int = 4,
+):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    sub = b.sub(name)
+    sub.add("in_proj", (d_model, 2 * d_inner + 2 * d_state + n_heads),
+            ("embed", "mlp"))
+    sub.add("conv_w", (conv_width, d_inner + 2 * d_state), ("conv", "mlp"))
+    sub.add("conv_b", (d_inner + 2 * d_state,), ("mlp",), init="zeros")
+    sub.add("A_log", (n_heads,), ("heads",), init="zeros")
+    sub.add("dt_bias", (n_heads,), ("heads",), init="zeros")
+    sub.add("D", (n_heads,), ("heads",), init="ones")
+    sub.add("norm_scale", (d_inner,), ("mlp",), init="ones")
+    sub.add("out_proj", (d_inner, d_model), ("mlp", "embed"))
+
+
+def _mamba2_dims(params):
+    conv_dim = params["conv_w"].shape[1]
+    n_heads = params["A_log"].shape[0]
+    d_state = None  # derived below
+    return conv_dim, n_heads
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, [(0, 0), (width - 1, 0), (0, 0)])
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return out + b
+
+
+def mamba2(params, x, *, d_state: int, head_dim: int = 64, chunk: int = 256,
+           init_state=None, return_state: bool = False):
+    """x: (B,S,d). Returns y (B,S,d) [and final ssm state]."""
+    b_, s, d = x.shape
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+    xbc = _causal_conv(jax.nn.silu(xbc), params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    xs, b_ssm, c_ssm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+    log_decay = a * dt  # (B,S,H) = log of exp(a*dt)
+    xh = xs.reshape(b_, s, n_heads, head_dim)
+    k = jnp.broadcast_to(b_ssm[:, :, None, :], (b_, s, n_heads, d_state)) * dt[..., None]
+    q = jnp.broadcast_to(c_ssm[:, :, None, :], (b_, s, n_heads, d_state))
+    y, state = chunked_linear_rnn(q, k, xh, log_decay, chunk=chunk,
+                                  init_state=init_state)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b_, s, d_inner).astype(x.dtype)
+    # gated RMSNorm then out projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_scale"]).astype(x.dtype)
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba2_decode_init(batch: int, params, d_state: int, head_dim: int = 64):
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    conv_dim = d_inner + 2 * d_state
+    width = params["conv_w"].shape[0]
+    return {
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, width - 1, conv_dim), jnp.float32),
+    }
+
+
+MAMBA_STATE_AXES = {"ssm": ("batch", "heads", "state", "head_dim"),
+                    "conv": ("batch", None, "mlp")}
+
+
+def mamba2_decode(params, x, state, *, d_state: int, head_dim: int = 64):
+    """One-token decode. x: (B,1,d)."""
+    b_, _, d = x.shape
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+    xbc = jax.nn.silu(xbc)
+    # conv over ring of previous inputs
+    hist = jnp.concatenate([state["conv"], xbc[:, None].astype(jnp.float32)], 1)
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"]
+    new_conv = hist[:, 1:]
+    xs, b_ssm, c_ssm = jnp.split(conv_out.astype(x.dtype), [d_inner, d_inner + d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    log_decay = a * dt
+    xh = xs.reshape(b_, n_heads, head_dim)
+    k = jnp.broadcast_to(b_ssm[:, None, :], (b_, n_heads, d_state)) * dt[..., None]
+    q = jnp.broadcast_to(c_ssm[:, None, :], (b_, n_heads, d_state))
+    ssm, y = linear_rnn_step(state["ssm"], q, k, xh, log_decay)
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b_, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]).astype(x.dtype)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out[:, None], {"ssm": ssm, "conv": new_conv}

@@ -1,0 +1,156 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked-parallel)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM reuses the chunked linear-recurrence engine: state C_t (Dk x Dv) with
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, 1)
+The normaliser n is carried by augmenting v with a constant-one column.
+We use sigmoid forget / exp-free input gating (the stabilised variant) —
+noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.nn.module import ParamBuilder
+from repro.nn.ssm import chunked_linear_rnn, linear_rnn_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(b: ParamBuilder, name: str, d_model: int, n_heads: int):
+    d_head = d_model // n_heads
+    sub = b.sub(name)
+    sub.add("wq", (d_model, n_heads * d_head), ("embed", "heads"))
+    sub.add("wk", (d_model, n_heads * d_head), ("embed", "heads"))
+    sub.add("wv", (d_model, n_heads * d_head), ("embed", "heads"))
+    sub.add("wif", (d_model, 2 * n_heads), ("embed", None))
+    sub.add("bif", (2 * n_heads,), (None,), init="zeros")
+    sub.add("wo", (n_heads * d_head, d_model), ("heads", "embed"))
+    rmsnorm_init(sub, "out_norm", d_model)
+
+
+def _mlstm_qkv(params, x, n_heads):
+    dt = x.dtype
+    b_, s, d = x.shape
+    resh = lambda y: y.reshape(b_, s, n_heads, -1)
+    q = resh(x @ params["wq"].astype(dt))
+    k = resh(x @ params["wk"].astype(dt))
+    v = resh(x @ params["wv"].astype(dt))
+    gates = x @ params["wif"].astype(dt) + params["bif"].astype(dt)
+    i_g, f_g = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_g)
+    i_g = jnp.exp(jax.nn.log_sigmoid(i_g))  # stabilised input gate in (0,1)
+    d_head = q.shape[-1]
+    k = k / jnp.sqrt(d_head)
+    return q, k, v, i_g, log_f
+
+
+def mlstm(params, x, *, n_heads: int, chunk: int = 256, init_state=None,
+          return_state=False):
+    b_, s, d = x.shape
+    q, k, v, i_g, log_f = _mlstm_qkv(params, x, n_heads)
+    # augment values with ones column to carry the normaliser
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    k_in = k * i_g[..., None]
+    y_aug, state = chunked_linear_rnn(q, k_in, v_aug, log_f, chunk=chunk,
+                                      init_state=init_state)
+    y, n = y_aug[..., :-1], y_aug[..., -1:]
+    h = y / jnp.maximum(jnp.abs(n), 1.0)
+    out = h.reshape(b_, s, -1).astype(x.dtype) @ params["wo"].astype(x.dtype)
+    out = rmsnorm(params["out_norm"], out)
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_decode_init(batch: int, d_model: int, n_heads: int):
+    d_head = d_model // n_heads
+    return jnp.zeros((batch, n_heads, d_head, d_head + 1), jnp.float32)
+
+
+def mlstm_decode(params, x, state, *, n_heads: int):
+    """x: (B,1,d)."""
+    q, k, v, i_g, log_f = _mlstm_qkv(params, x, n_heads)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    state, y_aug = linear_rnn_step(state, q[:, 0], (k * i_g[..., None])[:, 0],
+                                   v_aug[:, 0], log_f[:, 0])
+    y, n = y_aug[..., :-1], y_aug[..., -1:]
+    h = (y / jnp.maximum(jnp.abs(n), 1.0))[:, None]
+    b_ = x.shape[0]
+    out = h.reshape(b_, 1, -1).astype(x.dtype) @ params["wo"].astype(x.dtype)
+    return rmsnorm(params["out_norm"], out), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, sequential over time
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(b: ParamBuilder, name: str, d_model: int, n_heads: int):
+    sub = b.sub(name)
+    # input + recurrent weights for 4 gates (i, f, z, o)
+    sub.add("w", (d_model, 4 * d_model), ("embed", "mlp"))
+    sub.add("r", (n_heads, d_model // n_heads, 4 * (d_model // n_heads)),
+            (None, None, None))
+    sub.add("bias", (4 * d_model,), ("mlp",), init="zeros")
+    rmsnorm_init(sub, "out_norm", d_model)
+
+
+def _slstm_cell(params, x_t, carry, n_heads):
+    """x_t: (B, 4*d) pre-projected inputs. carry: (h, c, n)."""
+    h, c, n = carry  # (B,d) each, fp32
+    b_, d4 = x_t.shape
+    d = d4 // 4
+    dh = d // n_heads
+    hh = h.reshape(b_, n_heads, dh)
+    rec = jnp.einsum("bhk,hkg->bhg", hh, params["r"].astype(jnp.float32))
+    # (B,H,4*dh) -> (B,4,H,dh) -> (B,4d): keep gate-major layout aligned with
+    # the input projection / bias so the per-head block structure is exact.
+    rec = rec.reshape(b_, n_heads, 4, dh).transpose(0, 2, 1, 3).reshape(b_, 4 * d)
+    pre = x_t.astype(jnp.float32) + rec + params["bias"].astype(jnp.float32)
+    i_g, f_g, z_g, o_g = jnp.split(pre, 4, axis=-1)
+    i_g = jnp.exp(jax.nn.log_sigmoid(i_g))  # stabilised
+    f_g = jax.nn.sigmoid(f_g)
+    z_g = jnp.tanh(z_g)
+    o_g = jax.nn.sigmoid(o_g)
+    c = f_g * c + i_g * z_g
+    n = f_g * n + i_g
+    h_new = o_g * c / jnp.maximum(n, 1.0)
+    return (h_new, c, n)
+
+
+def slstm(params, x, *, n_heads: int, init_state=None, return_state=False):
+    """x: (B,S,d). Sequential lax.scan over time."""
+    b_, s, d = x.shape
+    xw = x @ params["w"].astype(x.dtype)  # (B,S,4d)
+    if init_state is None:
+        zero = jnp.zeros((b_, d), jnp.float32)
+        init_state = (zero, zero, zero)
+
+    def step(carry, x_t):
+        carry = _slstm_cell(params, x_t, carry, n_heads)
+        return carry, carry[0]
+
+    carry, hs = jax.lax.scan(step, init_state, xw.swapaxes(0, 1))
+    out = rmsnorm(params["out_norm"], hs.swapaxes(0, 1).astype(x.dtype))
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_decode_init(batch: int, d_model: int):
+    zero = jnp.zeros((batch, d_model), jnp.float32)
+    return (zero, zero, zero)
+
+
+def slstm_decode(params, x, state, *, n_heads: int):
+    xw = x[:, 0] @ params["w"].astype(x.dtype)
+    state = _slstm_cell(params, xw, state, n_heads)
+    out = rmsnorm(params["out_norm"], state[0][:, None].astype(x.dtype))
+    return out, state

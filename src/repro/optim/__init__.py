@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adafactor, adamw, apply_updates,
+                                    clip_by_global_norm, sgd)
+from repro.optim.schedules import cosine_schedule, pres_schedule

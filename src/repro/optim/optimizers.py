@@ -1,0 +1,182 @@
+"""Pure-JAX optimizers (optax is not available in this container).
+
+Each optimizer is an (init, update) pair operating on pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+Adafactor is provided for the >100B MoE configs whose Adam moments would not
+fit HBM (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    # logical axes for the per-param state entries, given the param axes tree
+    state_axes: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    def state_axes(param_axes):
+        return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; rank>=2 params)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr, decay=0.8, eps=1e-30, clip_threshold=1.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def mk(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"m": jax.tree.map(mk, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(m, g, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * m["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * m["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_m = {"vr": vr, "vc": vc}
+            else:
+                v = beta * m["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_m = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, new_m
+
+        flat = jax.tree.map(upd, state["m"], grads, params,
+                            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": new_m, "step": step}
+
+    def state_axes(param_axes):
+        def mk(ax):
+            if ax is None:
+                ax = ()
+            if len(ax) >= 2:
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + tuple(ax[-1:])}
+            return {"v": tuple(ax)}
+
+        m_axes = jax.tree.map(mk, param_axes,
+                              is_leaf=lambda x: isinstance(x, tuple) and all(
+                                  isinstance(e, (str, type(None))) for e in x))
+        return {"m": m_axes, "step": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mu)
+            return updates, {"mu": mu, "step": step}
+        updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, {"step": step}
+
+    def state_axes(param_axes):
+        if momentum:
+            return {"mu": param_axes, "step": ()}
+        return {"step": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}

@@ -1,0 +1,25 @@
+"""LR schedules, including the paper's Theorem-2 step size."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def pres_schedule(mu: float, lipschitz: float, n_batches: int):
+    """Theorem 2: eta_t = mu / (L * sqrt(K * t)) — the convergence-optimal
+    step size given memory coherence mu and K temporal batches per epoch."""
+    def fn(step):
+        t = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+        return mu / (lipschitz * jnp.sqrt(n_batches * t))
+
+    return fn

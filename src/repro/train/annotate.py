@@ -1,0 +1,61 @@
+"""Sharding-annotation hooks for the distributed MDGNN step.
+
+Two recurring GSPMD propagation failures in the event->memory pipeline
+(EXPERIMENTS.md §Perf):
+
+* scatters of event-sharded updates into a node-sharded/replicated table are
+  combined with DENSE table-sized all-reduces. `compact(x)` marks the compact
+  per-occurrence update arrays so the spec can re-shard them explicitly.
+* gathers from a replicated table with event-sharded indices come out
+  REPLICATED, dragging every downstream per-occurrence tensor (and its
+  cotangent) into full-size all-reduces. `events(x)` pins such tensors'
+  leading dim back to the event axes.
+
+Both are no-ops unless a hook is installed (single-host training is
+unaffected); the distributed spec installs with_sharding_constraint hooks,
+active exactly while the step body is being traced."""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def compact(x):
+    """Annotate a compact per-occurrence array at a scatter boundary."""
+    fn = getattr(_state, "compact_fn", None)
+    return fn(x) if fn is not None else x
+
+
+def events(x):
+    """Annotate a per-occurrence tensor (leading dim = occurrences)."""
+    fn = getattr(_state, "events_fn", None)
+    return fn(x) if fn is not None else x
+
+
+def weights(x):
+    """Annotate a per-scan-iteration weight leaf. Under FSDP the zoo spec
+    installs a gather-to-replicated constraint here: XLA then all-gathers
+    the (MB-scale) layer weights once per scan step instead of all-reducing
+    the (GB-scale) activations whose contraction dim the FSDP sharding
+    split (EXPERIMENTS.md §Perf pair 3)."""
+    fn = getattr(_state, "weights_fn", None)
+    return fn(x) if fn is not None else x
+
+
+@contextlib.contextmanager
+def install(compact_fn=None, events_fn=None, weights_fn=None):
+    prev = (getattr(_state, "compact_fn", None),
+            getattr(_state, "events_fn", None),
+            getattr(_state, "weights_fn", None))
+    if compact_fn is not None:
+        _state.compact_fn = compact_fn
+    if events_fn is not None:
+        _state.events_fn = events_fn
+    if weights_fn is not None:
+        _state.weights_fn = weights_fn
+    try:
+        yield
+    finally:
+        (_state.compact_fn, _state.events_fn, _state.weights_fn) = prev

@@ -1,0 +1,143 @@
+"""Distributed MDGNN training (pjit): the paper's workload at production
+scale on the 256/512-chip mesh.
+
+Sharding scheme (DESIGN.md §3):
+  * memory table S (N, D), last-update times, PRES trackers, neighbour ring
+    buffers — row-sharded over the ("pod","data") axes ("nodes" logical axis)
+  * temporal-batch events — sharded over the same axes ("event" logical axis)
+  * model parameters — replicated (they are MLP/GRU-sized)
+GSPMD inserts the gather/scatter collectives for memory-row access; driving
+those down is hillclimb material in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.graph.events import EventBatch
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.nn import module as module_lib
+from repro.optim import optimizers as opt_lib
+from repro.train import loop as loop_lib
+
+
+def _axes_shardings(axes_tree, rules, mesh):
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None), tuple)) for e in x)
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, module_lib.logical_to_spec(
+            ax, rules, mesh.axis_names)), axes_tree, is_leaf=is_ax)
+
+
+def event_batch_struct(batch_size: int, d_edge: int) -> EventBatch:
+    return EventBatch(
+        src=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        dst=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        t=jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+        feat=jax.ShapeDtypeStruct((batch_size, d_edge), jnp.float32),
+        mask=jax.ShapeDtypeStruct((batch_size,), jnp.bool_),
+    )
+
+
+def event_batch_sharding(mesh, rules) -> EventBatch:
+    ev = module_lib.logical_to_spec(("event",), rules, mesh.axis_names)
+    ev2 = module_lib.logical_to_spec(("event", None), rules, mesh.axis_names)
+    s1 = NamedSharding(mesh, ev)
+    return EventBatch(src=s1, dst=s1, t=s1,
+                      feat=NamedSharding(mesh, ev2), mask=s1)
+
+
+def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
+                          rules=None, strategy: str = "gspmd"):
+    """LoweredSpec-compatible bundle for the dry-run.
+
+    strategy:
+      "gspmd"          — paper-faithful baseline: node-sharded state; GSPMD
+                         inserts the memory gather/scatter collectives.
+      "compact_update" — beyond-paper (EXPERIMENTS.md §Perf): replicate the
+                         memory/state tables and explicitly all-gather only
+                         the COMPACT per-occurrence update arrays at the
+                         scatter boundaries (repro.train.annotate) so the
+                         dense table scatters are provably local — removing
+                         the table-sized all-reduces GSPMD otherwise emits.
+    """
+    from repro.launch.specs import LoweredSpec
+
+    if strategy == "compact_update" and rules is None:
+        rules = dict(module_lib.RULE_SETS["mdgnn_replicated"])
+    rules = rules or dict(module_lib.DEFAULT_RULES)
+    opt = opt_lib.adamw(1e-3)
+
+    holder = {}
+
+    def initp(k):
+        p, a = mdgnn.init_params(k, cfg)
+        holder["axes"] = a
+        return p
+
+    param_shapes = jax.eval_shape(initp, jax.random.PRNGKey(0))
+    param_axes = holder["axes"]
+    opt_shapes = jax.eval_shape(opt.init, param_shapes)
+    opt_axes = opt.state_axes(param_axes)
+    state_shapes = jax.eval_shape(functools.partial(mdgnn.init_state, cfg))
+    state_axes = {k: mdgnn.STATE_AXES[k] for k in state_shapes}
+
+    p_shard = _axes_shardings(param_axes, rules, mesh)
+    o_shard = _axes_shardings(opt_axes, rules, mesh)
+    s_shard = _axes_shardings(state_axes, rules, mesh)
+    b_shard = event_batch_sharding(mesh, rules)
+
+    train_step_fn = _make_raw_train_step(cfg, opt, mesh=mesh,
+                                         strategy=strategy, rules=rules)
+    batch = event_batch_struct(batch_size, cfg.d_edge)
+
+    return LoweredSpec(
+        fn=train_step_fn,
+        args=(param_shapes, opt_shapes, state_shapes, batch, batch, batch),
+        in_shardings=(p_shard, o_shard, s_shard, b_shard, b_shard, b_shard),
+        out_shardings=(p_shard, o_shard, s_shard, NamedSharding(mesh, P())),
+    )
+
+
+def _make_raw_train_step(cfg: MDGNNConfig, opt, mesh=None,
+                         strategy: str = "gspmd", rules=None):
+    """Un-jitted train step (the dry-run jits it with explicit shardings)."""
+    from repro.train import annotate
+
+    replicated = (NamedSharding(mesh, P()) if mesh is not None else None)
+
+    def _event_sharding(x):
+        """Pin a per-occurrence tensor's leading dim to the event axes."""
+        spec = module_lib.logical_to_spec(
+            ("event",) + (None,) * (x.ndim - 1), rules, mesh.axis_names)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def train_step(params, opt_state, state, prev_batch, pos, neg):
+        # re-use the single-host step body without its jax.jit wrapper
+        step = loop_lib.make_train_step(cfg, opt)
+        fn = step.__wrapped__
+
+        def run():
+            return fn(params, opt_state, state, prev_batch, pos, neg)
+
+        hooks = {}
+        if strategy == "compact_update":
+            hooks["compact_fn"] = lambda x: jax.lax.with_sharding_constraint(
+                x, replicated)
+        if strategy in ("compact_update", "optimized") and rules is not None:
+            hooks["events_fn"] = _event_sharding
+        if hooks:
+            # hooks are active during TRACING of the step body, which is
+            # exactly when the annotate.* sites execute
+            with annotate.install(**hooks):
+                params2, opt_state2, state2, metrics = run()
+        else:
+            params2, opt_state2, state2, metrics = run()
+        return params2, opt_state2, state2, metrics["loss"]
+
+    return train_step

@@ -1,0 +1,212 @@
+"""MDGNN training loop (Alg. 1 standard / Alg. 2 PRES).
+
+Lag-one scheme: temporal batch B_{i-1} updates the memory; embeddings then
+predict batch B_i (positives + sampled negatives). With PRES enabled the
+memory measurement is fused with the GMM prediction (Sec. 5.1) and the
+memory-coherence smoothing term (Eq. 10) is added to the loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batching, coherence, pres
+from repro.train import annotate
+from repro.graph.events import EventBatch, EventStream
+from repro.graph.negatives import sample_negatives
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig, MemoryState
+from repro.utils import metrics as metrics_lib
+
+
+def _apply_pres(params, cfg, mem2, info, pres_state):
+    """Fuse the measured memory rows with the GMM prediction and write the
+    fused rows back into the table. Returns (mem_state, fused_rows, deltas).
+
+    Eq. 7 scale: "count" extrapolates by the node's pending-event count in
+    the batch — the number of sequential GRU transitions flattened into one
+    by batch processing. MDGNN memory moves per EVENT, not per unit time, so
+    this directly reconstructs the missed accumulation (EXPERIMENTS.md
+    §Paper-validation compares it against the paper-literal "time" scale)."""
+    if cfg.pres_scale == "count":
+        counts = jax.ops.segment_sum(
+            info["mask"].astype(jnp.float32),
+            jnp.where(info["mask"], info["nodes"], cfg.n_nodes),
+            num_segments=cfg.n_nodes + 1)[:-1]
+        scale = counts[info["nodes"]]
+    else:  # "time" — paper-literal (t2 - t1)
+        scale = jnp.maximum(info["t_now"] - info["t_prev"], 0.0)
+    # Sec. 5.3 anchor-set approximation: GMM trackers live in hash buckets
+    pres_ids = (info["nodes"] % cfg.pres_buckets if cfg.pres_buckets
+                else info["nodes"])
+    s_pred = pres.predict(pres_state, info["s_prev"], scale, pres_ids,
+                          clip=cfg.pres_clip)
+    fused = pres.correct(params["pres"], s_pred, info["s_meas"])
+    fused = annotate.compact(fused)   # compact-update boundary (see annotate)
+    write_idx = jnp.where(info["selected"], info["nodes"], cfg.n_nodes)
+    table = jnp.concatenate([mem2.mem, jnp.zeros((1, mem2.mem.shape[1]),
+                                                 mem2.mem.dtype)])
+    table = table.at[write_idx].set(fused.astype(table.dtype),
+                                    mode="drop")[:-1]
+    # deltas are tracked per unit of `scale` so Eq. 7's extrapolation is
+    # dimensionally consistent in either mode
+    if cfg.delta_mode == "innovation":
+        delta = (fused - s_pred) / jnp.maximum(scale, 1.0)[:, None]
+    else:  # "transition" (Alg. 2): total memory movement per unit scale
+        delta = (fused - info["s_prev"]) / jnp.maximum(scale, 1.0)[:, None]
+    return MemoryState(mem=table, last_update=mem2.last_update), fused, delta
+
+
+def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
+    """Returns a jitted train_step closure."""
+
+    def loss_and_state(params, state, prev_batch: EventBatch,
+                       pos: EventBatch, neg: EventBatch):
+        mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
+                                         prev_batch, gru_fn=gru_fn,
+                                         defer_write=cfg.use_pres)
+        fused = info["s_meas"]
+        delta = jnp.zeros_like(fused)
+        if cfg.use_pres:
+            mem2, fused, delta = _apply_pres(params, cfg, mem2, info,
+                                             state["pres"])
+        state2 = dict(state, memory=mem2)
+        # ------------------------------------------------ link prediction --
+        # one batched embedding call for all four endpoint sets: one table
+        # gather -> ONE cotangent partial per table in the backward pass,
+        # instead of 4x2 table-sized combines (EXPERIMENTS.md §Perf iter. 7)
+        h = mdgnn.embed_nodes(
+            params, cfg, state2,
+            jnp.concatenate([pos.src, pos.dst, neg.src, neg.dst]),
+            jnp.concatenate([pos.t, pos.t, neg.t, neg.t]))
+        b = pos.src.shape[0]
+        h_src_p, h_dst_p, h_src_n, h_dst_n = (
+            h[:b], h[b:2 * b], h[2 * b:3 * b], h[3 * b:])
+        logit_p = mdgnn.link_logits(params, h_src_p, h_dst_p)
+        logit_n = mdgnn.link_logits(params, h_src_n, h_dst_n)
+        bce_p = jnp.sum(jax.nn.softplus(-logit_p) * pos.mask)
+        bce_n = jnp.sum(jax.nn.softplus(logit_n) * neg.mask)
+        denom = jnp.maximum(jnp.sum(pos.mask) + jnp.sum(neg.mask), 1.0)
+        loss = (bce_p + bce_n) / denom
+        # ------------------------------------------- coherence smoothing ---
+        pen = coherence.coherence_penalty(info["s_prev"], fused,
+                                          mask=info["selected"] & info["mask"])
+        use_smooth = (cfg.use_smoothing if cfg.use_smoothing is not None
+                      else cfg.use_pres)
+        if use_smooth and cfg.beta:
+            loss = loss + cfg.beta * pen
+        aux = {
+            "logit_p": logit_p, "logit_n": logit_n,
+            "coherence_penalty": pen,
+            "delta": jax.lax.stop_gradient(delta),
+            "info_nodes": info["nodes"], "info_selected": info["selected"],
+            "info_mask": info["mask"],
+        }
+        return loss, (state2, aux)
+
+    def train_step(params, opt_state, state, prev_batch, pos, neg):
+        (loss, (state2, aux)), grads = jax.value_and_grad(
+            loss_and_state, has_aux=True)(params, state, prev_batch, pos, neg)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        # ------------------------- non-differentiable state maintenance ----
+        state2 = jax.lax.stop_gradient(state2)
+        if cfg.use_pres:
+            track_ids = (aux["info_nodes"] % cfg.pres_buckets
+                         if cfg.pres_buckets else aux["info_nodes"])
+            new_pres = pres.update_trackers(
+                state2["pres"], track_ids, aux["delta"],
+                jnp.zeros_like(aux["info_nodes"]),
+                aux["info_selected"] & aux["info_mask"])
+            state2 = dict(state2, pres=new_pres)
+        state2 = dict(state2, neighbors=jax.lax.stop_gradient(
+            batching.update_neighbors(state2["neighbors"], prev_batch)))
+        if cfg.variant == "apan":
+            nodes, times, msgs, mask = mdgnn.compute_messages(
+                params, cfg, state2["memory"], prev_batch)
+            state2 = dict(state2, mailbox=mdgnn.update_mailbox(
+                cfg, state2["mailbox"], nodes,
+                jax.lax.stop_gradient(msgs), times, mask))
+        metrics = {"loss": loss, "coherence_penalty": aux["coherence_penalty"],
+                   "logit_p": aux["logit_p"], "logit_n": aux["logit_n"]}
+        return params, opt_state, state2, metrics
+
+    return jax.jit(train_step)
+
+
+def make_eval_step(cfg: MDGNNConfig):
+    def eval_step(params, state, prev_batch, pos, neg):
+        mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
+                                         prev_batch,
+                                         defer_write=cfg.use_pres)
+        if cfg.use_pres:
+            mem2, _, _ = _apply_pres(params, cfg, mem2, info, state["pres"])
+        state2 = dict(state, memory=mem2)
+        state2 = dict(state2, neighbors=batching.update_neighbors(
+            state2["neighbors"], prev_batch))
+        if cfg.variant == "apan":
+            nodes, times, msgs, mask = mdgnn.compute_messages(
+                params, cfg, state2["memory"], prev_batch)
+            state2 = dict(state2, mailbox=mdgnn.update_mailbox(
+                cfg, state2["mailbox"], nodes, msgs, times, mask))
+        h = mdgnn.embed_nodes(
+            params, cfg, state2,
+            jnp.concatenate([pos.src, pos.dst, neg.src, neg.dst]),
+            jnp.concatenate([pos.t, pos.t, neg.t, neg.t]))
+        b = pos.src.shape[0]
+        h_src_p, h_dst_p, h_src_n, h_dst_n = (
+            h[:b], h[b:2 * b], h[2 * b:3 * b], h[3 * b:])
+        logit_p = mdgnn.link_logits(params, h_src_p, h_dst_p)
+        logit_n = mdgnn.link_logits(params, h_src_n, h_dst_n)
+        return state2, logit_p, logit_n
+
+    return jax.jit(eval_step)
+
+
+@dataclasses.dataclass
+class EpochResult:
+    ap: float
+    loss: float
+    seconds: float
+    aps: list
+
+
+def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
+              train_step, key, dst_range, collect_logits=False):
+    """One training epoch over the temporal batches (lag-one)."""
+    t0 = time.perf_counter()
+    losses, pos_all, neg_all = [], [], []
+    for i in range(1, len(batches)):
+        key, sub = jax.random.split(key)
+        neg = sample_negatives(sub, batches[i], *dst_range)
+        params, opt_state, state, m = train_step(params, opt_state, state,
+                                                 batches[i - 1], batches[i], neg)
+        losses.append(float(m["loss"]))
+        pos_all.append(np.asarray(m["logit_p"]))
+        neg_all.append(np.asarray(m["logit_n"]))
+    ap = metrics_lib.average_precision(np.concatenate(pos_all),
+                                       np.concatenate(neg_all))
+    aps = [metrics_lib.average_precision(p, n) for p, n in zip(pos_all, neg_all)] \
+        if collect_logits else []
+    dt = time.perf_counter() - t0
+    return params, opt_state, state, EpochResult(ap, float(np.mean(losses)), dt, aps)
+
+
+def evaluate(params, state, batches, cfg: MDGNNConfig, eval_step, key, dst_range):
+    pos_all, neg_all = [], []
+    for i in range(1, len(batches)):
+        key, sub = jax.random.split(key)
+        neg = sample_negatives(sub, batches[i], *dst_range)
+        state, lp, ln = eval_step(params, state, batches[i - 1], batches[i], neg)
+        pos_all.append(np.asarray(lp))
+        neg_all.append(np.asarray(ln))
+    ap = metrics_lib.average_precision(np.concatenate(pos_all),
+                                       np.concatenate(neg_all))
+    auc = metrics_lib.roc_auc(np.concatenate(pos_all), np.concatenate(neg_all))
+    return state, ap, auc

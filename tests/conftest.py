@@ -1,0 +1,33 @@
+"""Shared fixtures. Tests run on the single default CPU device — the 512
+placeholder devices are set ONLY inside repro/launch/dryrun.py (never here)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.graph import datasets
+from repro.graph.events import EventStream
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_stream() -> EventStream:
+    """600-event bipartite stream: 50 users + 30 items."""
+    spec = datasets.SyntheticSpec("tiny", 50, 30, 600, 8)
+    return datasets.generate(spec, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_spec():
+    return datasets.SyntheticSpec("tiny", 50, 30, 600, 8)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

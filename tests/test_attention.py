@@ -1,0 +1,146 @@
+"""Blockwise (online-softmax) attention vs the dense reference, RoPE/M-RoPE
+equivalences, and the decode ring buffer."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as A
+
+
+def _qkv(rng, b, s, h, kv, d, t=None):
+    t = t or s
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, d)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, d)) * 0.3, jnp.float32)
+    return q, k, v
+
+
+def _dense(q, k, v, causal=True, window=None, cap=None):
+    s, t = q.shape[1], k.shape[1]
+    scores = A._gqa_scores(q, k)
+    if cap is not None:
+        scores = jnp.tanh(scores / cap) * cap
+    if causal:
+        mask = A.causal_mask(s, t, window=window)
+        scores = jnp.where(mask[None, None, None], scores, A.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    b_, s_ = q.shape[:2]
+    return A._gqa_out(probs, v, q.dtype).reshape(b_, s_, -1, q.shape[-1])
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (128, None),
+                                        (None, 30.0), (96, 50.0)])
+@pytest.mark.parametrize("qc,kc", [(128, 64), (256, 256), (64, 128)])
+def test_blockwise_matches_dense(window, cap, qc, kc):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, 2, 512, 8, 4, 32)
+    got = A.blockwise_attention(q, k, v, causal=True, window=window,
+                                softmax_scale_cap=cap, q_chunk=qc, kv_chunk=kc)
+    want = _dense(q, k, v, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_blockwise_mha_no_gqa():
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, 1, 256, 4, 4, 16)
+    got = A.blockwise_attention(q, k, v, causal=True, window=None,
+                                softmax_scale_cap=None, q_chunk=64,
+                                kv_chunk=64)
+    want = _dense(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_blockwise_gradients_match_dense():
+    rng = np.random.default_rng(2)
+    q, k, v = _qkv(rng, 1, 256, 4, 2, 16)
+    gb = jax.grad(lambda a, b, c: jnp.sum(A.blockwise_attention(
+        a, b, c, causal=True, window=None, softmax_scale_cap=None,
+        q_chunk=64, kv_chunk=64) ** 2), argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(lambda a, b, c: jnp.sum(_dense(a, b, c) ** 2),
+                  argnums=(0, 1, 2))(q, k, v)
+    for x, y in zip(gb, gd):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=5e-5)
+
+
+def test_attention_entry_uses_blockwise_consistently():
+    """attention(chunk=...) must equal attention(chunk=None) end to end."""
+    from repro.nn.module import ParamBuilder
+    b = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+    A.attention_init(b, "attn", 64, 4, 2, 16)
+    p = b.params["attn"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(256)[None], (2, 256))
+    dense = A.attention(p, x, pos, d_head=16, chunk=None)
+    blocked = A.attention(p, x, pos, d_head=16, chunk=64)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               atol=2e-5)
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([64, 128, 256]),
+       st.sampled_from([32, 64]), st.booleans())
+def test_blockwise_matches_dense_property(seed, qc, kc, use_window):
+    """Property sweep: random tensors, random chunkings, optional window —
+    blockwise must equal dense."""
+    rng = np.random.default_rng(seed)
+    s = 256
+    q, k, v = (jnp.asarray(rng.normal(size=(1, s, 4, 16)) * 0.4, jnp.float32),
+               jnp.asarray(rng.normal(size=(1, s, 2, 16)) * 0.4, jnp.float32),
+               jnp.asarray(rng.normal(size=(1, s, 2, 16)) * 0.4, jnp.float32))
+    window = 48 if use_window else None
+    got = A.blockwise_attention(q, k, v, causal=True, window=window,
+                                softmax_scale_cap=None, q_chunk=qc,
+                                kv_chunk=kc)
+    want = _dense(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-6)
+
+
+def test_rope_relative_property():
+    """RoPE: <q_i, k_j> depends only on (i - j)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = A.apply_rope(x, jnp.asarray([[i]]), 10000.0)
+        kj = A.apply_rope(y, jnp.asarray([[j]]), 10000.0)
+        return float(jnp.vdot(qi, kj))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(102, 100), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(7, 7), dot_at(0, 0), rtol=1e-4)
+
+
+def test_mrope_equals_rope_for_text():
+    """With all three position coords equal, M-RoPE == standard RoPE."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 8, 2, 24)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    mpos = jnp.broadcast_to(pos[:, None], (2, 3, 8))
+    a = A.apply_rope(x, pos, 10000.0)
+    b = A.apply_mrope(x, mpos, (4, 4, 4), 10000.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_decode_ring_buffer_window():
+    """Windowed decode: the ring buffer must attend to exactly the last
+    `window` positions."""
+    from repro.nn.module import ParamBuilder
+    b = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+    A.attention_init(b, "attn", 32, 2, 2, 16)
+    p = b.params["attn"]
+    window = 4
+    cache = A.init_cache(1, window, 2, 16, jnp.float32)
+    outs = []
+    for pos in range(10):
+        x = jax.random.normal(jax.random.PRNGKey(pos), (1, 1, 32), jnp.float32)
+        y, cache = A.decode_attention(p, x, cache, jnp.asarray(pos),
+                                      d_head=16, window=window)
+        outs.append(y)
+    assert all(bool(jnp.all(jnp.isfinite(o))) for o in outs)

@@ -1,0 +1,182 @@
+"""Temporal batching: pending events / pending sets (Defs. 1-2), per-node
+reductions (the batch-parallel semantics), neighbour ring buffers."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import batching
+from repro.graph.events import EventBatch
+
+
+def _mk_batch(src, dst, t, mask=None, feat_dim=2):
+    n = len(src)
+    return EventBatch(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        t=jnp.asarray(t, jnp.float32),
+        feat=jnp.zeros((n, feat_dim), jnp.float32),
+        mask=jnp.ones(n, bool) if mask is None else jnp.asarray(mask),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pending sets (Defs. 1-2)
+# ---------------------------------------------------------------------------
+
+
+def _pending_oracle(src, dst, t, mask):
+    """Brute-force |P(e, B)| per event."""
+    out = []
+    for i in range(len(src)):
+        c = 0
+        for j in range(len(src)):
+            if not (mask[i] and mask[j]):
+                continue
+            share = len({src[i], dst[i]} & {src[j], dst[j]}) > 0
+            if share and t[j] < t[i]:
+                c += 1
+        out.append(c)
+    return np.asarray(out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 10_000))
+def test_pending_counts_matches_oracle(b, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 5, b)
+    dst = rng.integers(5, 9, b)
+    t = np.round(rng.random(b) * 4) / 2.0  # coarse grid -> ties happen
+    mask = rng.random(b) > 0.2
+    got = np.asarray(batching.pending_counts(
+        jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+        jnp.asarray(t, jnp.float32), jnp.asarray(mask)))
+    want = _pending_oracle(src, dst, t, mask)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pending_fraction_grows_with_batch_size(tiny_stream):
+    """The paper's premise: bigger temporal batches contain more pending
+    events. Merging two consecutive batches can only add pending pairs."""
+    small = tiny_stream.temporal_batches(50)
+    large = tiny_stream.temporal_batches(200)
+    f_small = np.mean([batching.pending_fraction(b) for b in small[:8]])
+    f_large = np.mean([batching.pending_fraction(b) for b in large[:2]])
+    assert f_large >= f_small
+
+
+def test_pending_counts_empty_for_distinct_vertices():
+    b = _mk_batch([0, 1, 2], [3, 4, 5], [1.0, 2.0, 3.0])
+    got = np.asarray(batching.pending_counts(b.src, b.dst, b.t, b.mask))
+    np.testing.assert_array_equal(got, [0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Per-node reductions
+# ---------------------------------------------------------------------------
+
+
+def _last_oracle(nodes, times, values, mask, n):
+    out = np.zeros((n, values.shape[-1]), values.dtype)
+    t_out = np.zeros(n, times.dtype)
+    touched = np.zeros(n, bool)
+    best = np.full(n, -np.inf)
+    for i in range(len(nodes)):
+        if not mask[i]:
+            continue
+        v = nodes[i]
+        if times[i] >= best[v]:   # ties: later array index wins (stable sort)
+            best[v] = times[i]
+            out[v] = values[i]
+            t_out[v] = times[i]
+        touched[v] = True
+    return out, t_out, touched
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 20), st.integers(0, 10_000))
+def test_last_per_node_matches_oracle(m, seed):
+    rng = np.random.default_rng(seed)
+    n = 6
+    nodes = rng.integers(0, n, m)
+    times = np.round(rng.random(m) * 4) / 2.0
+    values = rng.normal(size=(m, 3)).astype(np.float32)
+    mask = rng.random(m) > 0.2
+    got_v, got_t, got_touch = batching.last_per_node(
+        jnp.asarray(nodes, jnp.int32), jnp.asarray(times, jnp.float32),
+        jnp.asarray(values), jnp.asarray(mask), n)
+    want_v, want_t, want_touch = _last_oracle(nodes, times.astype(np.float32),
+                                              values, mask, n)
+    np.testing.assert_array_equal(np.asarray(got_touch), want_touch)
+    np.testing.assert_allclose(np.asarray(got_t), want_t)
+    np.testing.assert_allclose(np.asarray(got_v), want_v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 20), st.integers(0, 10_000))
+def test_mean_per_node_matches_oracle(m, seed):
+    rng = np.random.default_rng(seed)
+    n = 5
+    nodes = rng.integers(0, n, m)
+    values = rng.normal(size=(m, 2)).astype(np.float32)
+    mask = rng.random(m) > 0.3
+    got, touched = batching.mean_per_node(
+        jnp.asarray(nodes, jnp.int32), jnp.asarray(values),
+        jnp.asarray(mask), n)
+    for v in range(n):
+        sel = (nodes == v) & mask
+        if sel.any():
+            assert bool(touched[v])
+            np.testing.assert_allclose(np.asarray(got[v]),
+                                       values[sel].mean(0), atol=1e-5)
+        else:
+            assert not bool(touched[v])
+
+
+def test_node_occurrences_layout():
+    b = _mk_batch([0, 1], [2, 3], [1.0, 2.0])
+    nodes, times, other, feat, mask = batching.node_occurrences(b)
+    np.testing.assert_array_equal(np.asarray(nodes), [0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(other), [2, 3, 0, 1])
+    np.testing.assert_array_equal(np.asarray(times), [1.0, 2.0, 1.0, 2.0])
+    assert feat.shape == (4, 2) and mask.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# Neighbour ring buffers
+# ---------------------------------------------------------------------------
+
+
+def test_update_neighbors_ring_semantics():
+    k = 3
+    state = batching.init_neighbors(6, k)
+    # node 0 interacts with 1, 2, 3, 4 in order -> ring keeps last 3: 2,3,4
+    b = _mk_batch([0, 0, 0, 0], [1, 2, 3, 4], [1.0, 2.0, 3.0, 4.0])
+    state = batching.update_neighbors(state, b)
+    nbrs0 = set(int(x) for x in np.asarray(state["nbr"][0]))
+    assert nbrs0 == {2, 3, 4}
+    # symmetric: node 1 has neighbour 0
+    assert 0 in np.asarray(state["nbr"][1])
+    # ptr advanced by 4 occurrences mod 3 = 1
+    assert int(state["ptr"][0]) == 1
+
+
+def test_update_neighbors_masked_events_ignored():
+    state = batching.init_neighbors(4, 2)
+    b = _mk_batch([0, 1], [2, 3], [1.0, 2.0], mask=[True, False])
+    state = batching.update_neighbors(state, b)
+    assert 2 in np.asarray(state["nbr"][0])
+    assert int(state["ptr"][1]) == 0
+    assert np.all(np.asarray(state["nbr"][1]) == -1)
+
+
+def test_update_neighbors_multibatch_order():
+    state = batching.init_neighbors(4, 2)
+    for dst, t in [(1, 1.0), (2, 2.0), (3, 3.0)]:
+        b = _mk_batch([0], [dst], [t])
+        state = batching.update_neighbors(state, b)
+    nbrs0 = set(int(x) for x in np.asarray(state["nbr"][0]))
+    assert nbrs0 == {2, 3}   # capacity 2 -> oldest (1) evicted

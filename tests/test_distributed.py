@@ -1,0 +1,282 @@
+"""Distribution plumbing testable on one CPU device: logical-axis resolution,
+sharded MDGNN train-spec lowering on a debug mesh, spec construction for the
+zoo, and the dry-run's HLO collective parser."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+from repro.nn import module as module_lib
+
+
+def _debug_mesh():
+    return mesh_lib.make_debug_mesh(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> PartitionSpec rules
+# ---------------------------------------------------------------------------
+
+
+def test_logical_to_spec_default_rules():
+    mesh = _debug_mesh()
+    rules = dict(module_lib.DEFAULT_RULES)
+    spec = module_lib.logical_to_spec(("batch", "seq"), rules, mesh.axis_names)
+    # 'pod' not in this mesh -> dropped; trailing None trimmed
+    assert spec == P("data")
+    spec = module_lib.logical_to_spec(("embed", "mlp"), rules, mesh.axis_names)
+    assert spec == P(None, "model")
+    spec = module_lib.logical_to_spec(("vocab", "embed"), rules, mesh.axis_names)
+    assert spec == P("model")
+
+
+def test_logical_to_spec_fsdp_rules():
+    mesh = _debug_mesh()
+    spec = module_lib.logical_to_spec(("embed", "mlp"),
+                                      module_lib.FSDP_RULES, mesh.axis_names)
+    assert spec == P("data", "model")
+
+
+def test_rule_sets_registered():
+    assert set(module_lib.RULE_SETS) >= {"default", "fsdp", "long_ctx"}
+    assert module_lib.RULE_SETS["long_ctx"]["cache_seq"] == "model"
+
+
+# ---------------------------------------------------------------------------
+# MDGNN distributed train step lowers + compiles on the debug mesh
+# ---------------------------------------------------------------------------
+
+
+def test_mdgnn_train_spec_compiles_debug_mesh():
+    from repro.models.mdgnn import MDGNNConfig
+    from repro.train.distributed import make_mdgnn_train_spec
+
+    cfg = MDGNNConfig(variant="tgn", n_nodes=64, d_edge=8, d_mem=16,
+                      d_msg=16, d_time=8, d_embed=16, use_pres=True)
+    mesh = _debug_mesh()
+    spec = make_mdgnn_train_spec(cfg, 32, mesh)
+    with mesh:
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings)
+        lowered = jitted.lower(*spec.args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    assert float(cost.get("flops", 0)) > 0
+
+
+def test_zoo_spec_lowers_debug_mesh():
+    """Reduced qwen3 config through the full make_spec machinery."""
+    from repro.launch import specs as specs_lib
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    mesh = _debug_mesh()
+    shape = SHAPES["train_4k"]
+    # shrink the shape for CPU lowering speed
+    import dataclasses
+    shape = dataclasses.replace(shape, seq_len=64, global_batch=2)
+    spec = specs_lib.make_spec(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                          out_shardings=spec.out_shardings).lower(*spec.args)
+        compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_decode_spec_lowers_debug_mesh():
+    from repro.launch import specs as specs_lib
+    import dataclasses
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    mesh = _debug_mesh()
+    shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=128,
+                                global_batch=2)
+    spec = specs_lib.make_spec(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                          out_shardings=spec.out_shardings).lower(*spec.args)
+        lowered.compile()
+
+
+def test_vocab_rules_fallback_for_indivisible_vocab():
+    """whisper's 51865 vocab cannot shard 16-way — the spec must fall back to
+    replicated output (the bug behind the original multi-pod failure)."""
+    from repro.launch import specs as specs_lib
+
+    mesh = _debug_mesh()
+    cfg = get_config("whisper-tiny")
+    rules = dict(module_lib.DEFAULT_RULES)
+    out = specs_lib.vocab_rules(cfg, rules, mesh)
+    assert out["vocab"] == "model" or out["vocab"] is None
+    # qwen3 151936 % 1 == 0 on the debug mesh; on a 16-way axis it divides too
+    cfg2 = get_config("qwen3-0.6b")
+    assert specs_lib.vocab_rules(cfg2, rules, mesh)["vocab"] == rules["vocab"]
+
+
+# ---------------------------------------------------------------------------
+# Dry-run HLO collective parser
+# ---------------------------------------------------------------------------
+
+
+def test_collective_stats_parser():
+    from repro.launch.dryrun import collective_stats
+
+    hlo = "\n".join([
+        "%ag = bf16[128,256]{1,0} all-gather(%x), dimensions={0}",
+        "%ar = f32[1024]{0} all-reduce(%y), to_apply=%add",
+        "%rs = f32[64,64]{1,0} reduce-scatter(%z), dimensions={0}",
+        "%cp = bf16[32]{0} collective-permute(%w)",
+        "%a2a = f32[16,16]{1,0} all-to-all(%v), dimensions={1}",
+        "%nothing = f32[8]{0} add(%a, %b)",
+    ])
+    stats = collective_stats(hlo)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 128 * 256 * 2
+    assert stats["all-reduce"]["bytes"] == 1024 * 4 * 2.0   # 2x wire factor
+    assert stats["reduce-scatter"]["bytes"] == 64 * 64 * 4
+    assert stats["collective-permute"]["bytes"] == 32 * 2
+    assert stats["all-to-all"]["bytes"] == 16 * 16 * 4
+    assert stats["total_bytes"] == sum(
+        stats[k]["bytes"] for k in ("all-gather", "all-reduce",
+                                    "reduce-scatter", "collective-permute",
+                                    "all-to-all"))
+
+
+def test_collective_stats_skips_done_ops():
+    from repro.launch.dryrun import collective_stats
+    hlo = "%d = f32[8]{0} all-gather-done(%s)"
+    assert collective_stats(hlo)["total_bytes"] == 0
+
+
+def test_model_flops_accounting():
+    """MODEL_FLOPS: 6ND train, 2ND prefill; MoE counts only active params."""
+    from repro.launch.dryrun import active_param_count, model_flops
+
+    cfg = get_config("qwen3-0.6b")
+    n = active_param_count(cfg)
+    assert 4e8 < n < 1.2e9       # ~0.6-0.75B incl. embeddings
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    tokens_tr = 4096 * 256
+    np.testing.assert_allclose(tr, 6 * n * tokens_tr, rtol=1e-6)
+    assert pf == 2 * n * 32768 * 32
+
+    moe = get_config("kimi-k2-1t-a32b")
+    n_active = active_param_count(moe)
+    assert n_active < 60e9       # ~32B active, NOT ~1T total
+
+
+def test_mdgnn_optimized_strategy_compiles_debug_mesh():
+    """The beyond-paper distribution bundle (EXPERIMENTS §Perf pair 1):
+    replicated params/state + event DP + bucketed trackers + bf16 table."""
+    from repro.models.mdgnn import MDGNNConfig
+    from repro.train.distributed import make_mdgnn_train_spec
+
+    cfg = MDGNNConfig(variant="tgn", n_nodes=64, d_edge=8, d_mem=16,
+                      d_msg=16, d_time=8, d_embed=16, use_pres=True,
+                      pres_buckets=16, mem_dtype="bfloat16")
+    mesh = _debug_mesh()
+    rules = dict(module_lib.RULE_SETS["mdgnn_event_dp_repl"])
+    spec = make_mdgnn_train_spec(cfg, 32, mesh, rules=rules,
+                                 strategy="optimized")
+    with mesh:
+        compiled = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                           out_shardings=spec.out_shardings
+                           ).lower(*spec.args).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_bucketed_trackers_learn_equivalently():
+    """pres_buckets >= n_nodes must behave exactly like per-node trackers
+    (the bucket map is injective then)."""
+    import numpy as np
+    from repro.graph import datasets
+    from repro.models import mdgnn
+    from repro.models.mdgnn import MDGNNConfig
+    from repro.optim import optimizers
+    from repro.train import loop
+
+    spec = datasets.SyntheticSpec("b", 30, 20, 400, 4)
+    stream = datasets.generate(spec, seed=0)
+    outs = []
+    for buckets in (None, stream.num_nodes):
+        cfg = MDGNNConfig(variant="jodie", n_nodes=stream.num_nodes,
+                          d_edge=4, d_mem=8, d_msg=8, d_time=4, d_embed=8,
+                          use_pres=True, pres_buckets=buckets)
+        params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+        state = mdgnn.init_state(cfg)
+        opt = optimizers.adamw(1e-3)
+        step = loop.make_train_step(cfg, opt)
+        p, os_, st = params, opt.init(params), state
+        batches = stream.temporal_batches(100)
+        key = jax.random.PRNGKey(1)
+        p, os_, st, res = loop.run_epoch(p, os_, st, batches, cfg, step,
+                                         key, (30, 50))
+        outs.append(res.ap)
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
+
+
+def test_bf16_memory_table_trains():
+    import numpy as np
+    from repro.graph import datasets
+    from repro.models import mdgnn
+    from repro.models.mdgnn import MDGNNConfig
+    from repro.optim import optimizers
+    from repro.train import loop
+
+    spec = datasets.SyntheticSpec("b16", 30, 20, 400, 4)
+    stream = datasets.generate(spec, seed=0)
+    cfg = MDGNNConfig(variant="tgn", n_nodes=stream.num_nodes, d_edge=4,
+                      d_mem=8, d_msg=8, d_time=4, d_embed=8, use_pres=True,
+                      mem_dtype="bfloat16")
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    assert state["memory"].mem.dtype == jnp.bfloat16
+    opt = optimizers.adamw(1e-3)
+    step = loop.make_train_step(cfg, opt)
+    p, os_, st, res = loop.run_epoch(params, opt.init(params), state,
+                                     stream.temporal_batches(100), cfg,
+                                     step, jax.random.PRNGKey(1), (30, 50))
+    assert np.isfinite(res.loss)
+    assert st["memory"].mem.dtype == jnp.bfloat16
+
+
+def test_fsdp_weight_gather_hook_preserves_math():
+    """The weight-gather wsc must not change the loss value (1-device mesh:
+    constraints are no-ops numerically)."""
+    import dataclasses
+    from repro.launch import specs as specs_lib
+
+    cfg = get_config("gemma3-12b").reduced()
+    mesh = _debug_mesh()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                global_batch=2)
+    rules = dict(module_lib.RULE_SETS["fsdp"])
+    spec = specs_lib.make_train_spec(cfg, shape, mesh, rules=rules)
+    model = specs_lib.get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (2, 64), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    loss_direct, _ = model.loss_fn(params, batch)
+    from repro.optim import optimizers as opt_lib
+    opt = opt_lib.adamw(1e-4)
+    with mesh:
+        _, _, loss_spec = jax.jit(spec.fn)(params, opt.init(params), batch)
+    np.testing.assert_allclose(float(loss_direct), float(loss_spec),
+                               rtol=1e-5)
+
+
+def test_production_mesh_shapes():
+    """Mesh builders give the assignment's production shapes. (Constructing
+    a 256-device mesh needs the dry-run's 512 fake devices, so here we only
+    check the documented shape contract.)"""
+    import inspect
+    src = inspect.getsource(mesh_lib.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src or "('pod', 'data', 'model')" in src

@@ -1,0 +1,111 @@
+"""Graph substrate: event streams, temporal batches, chronological split,
+negative sampling (Assumption 1), synthetic generators, CSV loader."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import datasets, negatives
+from repro.graph.events import EventStream, load_jodie_csv
+
+
+def test_chronological_split_boundaries(tiny_stream):
+    tr, va, te = tiny_stream.chronological_split(0.7, 0.15)
+    assert len(tr) + len(va) + len(te) == len(tiny_stream)
+    assert tr.t[-1] <= va.t[0] and va.t[-1] <= te.t[0]
+
+
+def test_temporal_batches_cover_stream_with_padding(tiny_stream):
+    b = 77
+    batches = tiny_stream.temporal_batches(b)
+    assert len(batches) == -(-len(tiny_stream) // b)
+    total_valid = sum(int(jnp.sum(x.mask)) for x in batches)
+    assert total_valid == len(tiny_stream)
+    for x in batches:
+        assert x.size == b      # all padded to fixed size (jit-stable shapes)
+    # chronological within and across batches
+    last_t = -1.0
+    for x in batches:
+        ts = np.asarray(x.t)[np.asarray(x.mask)]
+        assert np.all(np.diff(ts) >= 0)
+        if len(ts):
+            assert ts[0] >= last_t
+            last_t = ts[-1]
+
+
+def test_negative_sampler_ranges(tiny_stream):
+    batch = tiny_stream.temporal_batches(100)[0]
+    neg = negatives.sample_negatives(jax.random.PRNGKey(0), batch, 50, 80)
+    d = np.asarray(neg.dst)
+    assert d.min() >= 50 and d.max() < 80
+    assert neg.size == batch.size
+    # sources drawn from the batch's own sources
+    assert set(np.asarray(neg.src)) <= set(np.asarray(batch.src))
+    # negative features are zero (non-events carry no attributes)
+    assert float(jnp.abs(neg.feat).max()) == 0.0
+
+
+def test_negative_sampler_near_uniform():
+    """Assumption 1 needs an unbiased sampler: over many draws the negative
+    destinations should be ~uniform over [lo, hi)."""
+    from repro.graph.events import EventBatch
+    b = 512
+    batch = EventBatch(
+        src=jnp.zeros(b, jnp.int32), dst=jnp.zeros(b, jnp.int32),
+        t=jnp.zeros(b, jnp.float32), feat=jnp.zeros((b, 1), jnp.float32),
+        mask=jnp.ones(b, bool))
+    counts = np.zeros(10)
+    for i in range(40):
+        neg = negatives.sample_negatives(jax.random.PRNGKey(i), batch, 0, 10)
+        idx, c = np.unique(np.asarray(neg.dst), return_counts=True)
+        counts[idx] += c
+    freq = counts / counts.sum()
+    np.testing.assert_allclose(freq, 0.1, atol=0.01)
+
+
+@pytest.mark.parametrize("name", list(datasets.SPECS))
+def test_synthetic_generators(name):
+    stream = datasets.get_dataset(name)
+    spec = datasets.SPECS[name]
+    assert len(stream) == spec.n_events
+    assert np.all(np.diff(stream.t) >= 0)                      # chronological
+    assert stream.src.min() >= 0
+    assert stream.src.max() < spec.n_users                     # users
+    assert stream.dst.min() >= spec.n_users                    # items offset
+    assert stream.dst.max() < spec.n_users + spec.n_items
+    assert stream.num_nodes == spec.n_users + spec.n_items
+    # heavy-tailed activity: top-10% of users produce >25% of events
+    _, counts = np.unique(stream.src, return_counts=True)
+    counts = np.sort(counts)[::-1]
+    top = counts[: max(1, len(counts) // 10)].sum()
+    assert top / counts.sum() > 0.25
+
+
+def test_generator_deterministic():
+    spec = datasets.SyntheticSpec("t", 20, 10, 200, 4)
+    a = datasets.generate(spec, seed=3)
+    b = datasets.generate(spec, seed=3)
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    c = datasets.generate(spec, seed=4)
+    assert not np.array_equal(a.dst, c.dst)
+
+
+def test_load_jodie_csv_roundtrip(tmp_path):
+    p = tmp_path / "toy.csv"
+    p.write_text(
+        "user_id,item_id,timestamp,state_label,f0,f1\n"
+        "0,0,1.0,0,0.5,0.1\n"
+        "1,1,3.0,0,0.2,0.3\n"
+        "0,1,2.0,1,0.0,0.9\n")
+    stream = load_jodie_csv(str(p))
+    assert len(stream) == 3
+    assert np.all(np.diff(stream.t) >= 0)          # re-sorted chronologically
+    assert stream.feat.shape == (3, 2)
+    # items offset by n_users = 2
+    assert stream.dst.min() >= 2
+    np.testing.assert_array_equal(stream.src, [0, 0, 1])
+    np.testing.assert_array_equal(stream.t, [1.0, 2.0, 3.0])

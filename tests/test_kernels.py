@@ -1,0 +1,328 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
+oracle in repro.kernels.ref, swept over shapes and dtypes."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# gru_cell
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b", [1, 7, 128, 300])
+@pytest.mark.parametrize("d", [32, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gru_cell_matches_ref(b, d, dtype):
+    rng = np.random.default_rng(b * 1000 + d)
+    x = jnp.asarray(rng.normal(size=(b, d)), dtype)
+    h = jnp.asarray(rng.normal(size=(b, d)), dtype)
+    w = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, dtype)
+    u = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, dtype)
+    bias = jnp.asarray(rng.normal(size=(3 * d,)) * 0.01, dtype)
+    out = ops.gru_cell(x, h, w, u, bias, interpret=True)
+    want = ref.gru_cell_ref(x, h, w, u, bias)
+    assert out.shape == (b, d)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_gru_cell_output_bounded():
+    """GRU output is a convex combination of h and tanh(.) — bounded by
+    max(|h|, 1)."""
+    rng = np.random.default_rng(0)
+    b, d = 64, 64
+    x = jnp.asarray(rng.normal(size=(b, d)) * 10, jnp.float32)
+    h = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, 3 * d)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(d, 3 * d)), jnp.float32)
+    bias = jnp.zeros((3 * d,), jnp.float32)
+    out = ops.gru_cell(x, h, w, u, bias, interpret=True)
+    bound = jnp.maximum(jnp.abs(h), 1.0) + 1e-6
+    assert bool(jnp.all(jnp.abs(out) <= bound))
+
+
+def test_gru_cell_agrees_with_model_cell():
+    """The Pallas kernel must agree with the MDGNN module's GRU (they are the
+    two implementations the config flag `use_kernels` switches between)."""
+    from repro.models import modules
+    from repro.nn.module import ParamBuilder
+
+    rng = np.random.default_rng(3)
+    d = 96
+    b = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+    modules.gru_init(b, "mem", d, d)
+    p = b.params["mem"]
+    x = jnp.asarray(rng.normal(size=(33, d)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(33, d)), jnp.float32)
+    want = modules.gru_cell(p, x, h)
+    got = ops.gru_cell(x, h, p["w"], p["u"], p["b"], interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pres_filter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 64, 200])
+@pytest.mark.parametrize("d", [16, 128])
+def test_pres_filter_matches_ref(n, d):
+    rng = np.random.default_rng(n + d)
+    s_prev = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    s_meas = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    dm = jnp.asarray(rng.normal(size=(n, d)) * 0.01, jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(n,)), jnp.float32))
+    gamma = jnp.asarray(0.3, jnp.float32)
+    got = ops.pres_filter(s_prev, s_meas, dm, dt, gamma, interpret=True)
+    want = ref.pres_filter_ref(s_prev, s_meas, dm, dt, gamma)
+    got_l, want_l = jax.tree.leaves(got), jax.tree.leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+
+def test_pres_filter_gamma_extremes():
+    """gamma=1 -> pure measurement; gamma=0 -> pure (clipped) prediction."""
+    rng = np.random.default_rng(9)
+    n, d = 32, 32
+    s_prev = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    s_meas = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    dm = jnp.zeros((n, d), jnp.float32)
+    dt = jnp.ones((n,), jnp.float32)
+    out1 = ref.pres_filter_ref(s_prev, s_meas, dm, dt, jnp.asarray(1.0))
+    fused1 = jax.tree.leaves(out1)[0]
+    np.testing.assert_allclose(np.asarray(fused1), np.asarray(s_meas), atol=1e-6)
+    out0 = ref.pres_filter_ref(s_prev, s_meas, dm, dt, jnp.asarray(0.0))
+    fused0 = jax.tree.leaves(out0)[0]
+    # zero delta-mean => prediction == s_prev
+    np.testing.assert_allclose(np.asarray(fused0), np.asarray(s_prev), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# neighbor_attn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,e", [(1, 4, 32), (64, 16, 128), (130, 10, 64)])
+def test_neighbor_attn_matches_ref(m, k, e):
+    rng = np.random.default_rng(m + k + e)
+    q = jnp.asarray(rng.normal(size=(m, e)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(m, k, e)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(m, k, e)), jnp.float32)
+    valid = jnp.asarray(rng.random((m, k)) > 0.3)
+    got = ops.neighbor_attn(q, kk, v, valid, interpret=True)
+    want = ref.neighbor_attn_ref(q, kk, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_neighbor_attn_all_invalid_rows():
+    """A node with zero valid neighbours must produce zeros, not NaNs."""
+    rng = np.random.default_rng(4)
+    m, k, e = 8, 6, 32
+    q = jnp.asarray(rng.normal(size=(m, e)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(m, k, e)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(m, k, e)), jnp.float32)
+    valid = jnp.zeros((m, k), bool)
+    got = ops.neighbor_attn(q, kk, v, valid, interpret=True)
+    want = ref.neighbor_attn_ref(q, kk, v, valid)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_chunk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("g,l,n,p", [(1, 64, 32, 32), (4, 128, 64, 64),
+                                     (2, 256, 128, 128)])
+def test_ssd_chunk_matches_ref(g, l, n, p):
+    rng = np.random.default_rng(g * l)
+    q = jnp.asarray(rng.normal(size=(g, l, n)) * 0.1, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(g, l, n)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(g, l, p)) * 0.1, jnp.float32)
+    lcum = jnp.cumsum(
+        jnp.asarray(-np.abs(rng.normal(size=(g, l)) * 0.05), jnp.float32), -1)
+    h0 = jnp.asarray(rng.normal(size=(g, n, p)) * 0.1, jnp.float32)
+    y_k, h_k = ops.ssd_chunk(q, k, v, lcum, h0, interpret=True)
+    y_r, h_r = jax.vmap(ref.ssd_chunk_ref)(q, k, v, lcum, h0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-5)
+
+
+def test_ssd_chunking_is_exact():
+    """Two chained chunks == one double-length chunk (the inter-chunk scan
+    carries exactly the right state)."""
+    rng = np.random.default_rng(12)
+    l, n, p = 64, 32, 32
+    q = jnp.asarray(rng.normal(size=(2 * l, n)) * 0.1, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2 * l, n)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2 * l, p)) * 0.1, jnp.float32)
+    logd = jnp.asarray(-np.abs(rng.normal(size=(2 * l,)) * 0.05), jnp.float32)
+    h0 = jnp.zeros((n, p), jnp.float32)
+    # full
+    y_full, h_full = ref.ssd_chunk_ref(q, k, v, jnp.cumsum(logd), h0)
+    # chunked
+    y1, h_mid = ref.ssd_chunk_ref(q[:l], k[:l], v[:l], jnp.cumsum(logd[:l]), h0)
+    y2, h_end = ref.ssd_chunk_ref(q[l:], k[l:], v[l:], jnp.cumsum(logd[l:]),
+                                  h_mid)
+    np.testing.assert_allclose(np.asarray(y_full[:l]), np.asarray(y1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_full[l:]), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h_end), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+@pytest.mark.parametrize("g,s,d,qb,kb", [(2, 256, 64, 64, 64),
+                                         (1, 512, 128, 128, 64)])
+def test_flash_attn_matches_ref(causal, window, g, s, d, qb, kb):
+    from repro.kernels import flash_attn as FA
+    rng = np.random.default_rng(g * s + d)
+    q = jnp.asarray(rng.normal(size=(g, s, d)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(g, s, d)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(g, s, d)) * 0.3, jnp.float32)
+    got = ops.flash_attn(q, k, v, causal=causal, window=window,
+                         q_block=qb, kv_block=kb, interpret=True)
+    want = FA.flash_attn_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_flash_attn_gqa_kv_sharing():
+    """GQA: kv heads indexed by query_head // n_rep inside the BlockSpec."""
+    from repro.kernels import flash_attn as FA
+    rng = np.random.default_rng(11)
+    b, hq, hkv, s, d = 2, 8, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(b * hq, s, d)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b * hkv, s, d)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b * hkv, s, d)) * 0.3, jnp.float32)
+    got = ops.flash_attn(q, k, v, q_block=64, kv_block=64, interpret=True)
+    want = FA.flash_attn_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+def test_flash_attn_bf16_io():
+    from repro.kernels import flash_attn as FA
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)) * 0.3, jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)) * 0.3, jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)) * 0.3, jnp.bfloat16)
+    got = ops.flash_attn(q, k, v, q_block=64, kv_block=64, interpret=True)
+    want = FA.flash_attn_ref(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+def test_flash_attn_gradients_match_oracle():
+    from repro.kernels import flash_attn as FA
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(1, 128, 32)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 32)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 32)) * 0.3, jnp.float32)
+    gk = jax.grad(lambda *a: jnp.sum(ops.flash_attn(
+        *a, q_block=64, kv_block=64, interpret=True) ** 2),
+        argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: jnp.sum(FA.flash_attn_ref(*a) ** 2),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Gradients: every kernel's custom_vjp must match the oracle's gradient
+# ---------------------------------------------------------------------------
+
+
+def test_gru_cell_gradients_match_oracle():
+    rng = np.random.default_rng(21)
+    b, d = 64, 64
+    args = [jnp.asarray(rng.normal(size=s) * 0.3, jnp.float32)
+            for s in [(b, d), (b, d), (d, 3 * d), (d, 3 * d), (3 * d,)]]
+    g_kernel = jax.grad(lambda *a: jnp.sum(ops.gru_cell(*a,
+                                                        interpret=True) ** 2),
+                        argnums=(0, 1, 2, 3, 4))(*args)
+    g_ref = jax.grad(lambda *a: jnp.sum(ref.gru_cell_ref(*a) ** 2),
+                     argnums=(0, 1, 2, 3, 4))(*args)
+    for gk, gr in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-4)
+
+
+def test_pres_filter_gradient_flows_to_gamma():
+    """gamma is the learnable Eq. 8 gate — its gradient must be non-zero."""
+    rng = np.random.default_rng(22)
+    n, d = 32, 16
+    s_prev = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    s_meas = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    dm = jnp.asarray(rng.normal(size=(n, d)) * 0.01, jnp.float32)
+    dt = jnp.ones((n,), jnp.float32)
+
+    def loss(gamma):
+        fused, _ = ops.pres_filter(s_prev, s_meas, dm, dt, gamma,
+                                   interpret=True)
+        return jnp.sum(fused ** 2)
+
+    g = jax.grad(loss)(jnp.asarray(0.5, jnp.float32))
+    g_ref = jax.grad(lambda gm: jnp.sum(
+        ref.pres_filter_ref(s_prev, s_meas, dm, dt, gm)[0] ** 2))(
+            jnp.asarray(0.5, jnp.float32))
+    assert abs(float(g)) > 0
+    np.testing.assert_allclose(float(g), float(g_ref), rtol=1e-4)
+
+
+def test_neighbor_attn_gradients_match_oracle():
+    rng = np.random.default_rng(23)
+    m, k, e = 32, 8, 32
+    q = jnp.asarray(rng.normal(size=(m, e)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(m, k, e)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(m, k, e)), jnp.float32)
+    valid = jnp.asarray(rng.random((m, k)) > 0.3)
+    gk = jax.grad(lambda a, b, c: jnp.sum(
+        ops.neighbor_attn(a, b, c, valid, interpret=True) ** 2),
+        argnums=(0, 1, 2))(q, kk, v)
+    gr = jax.grad(lambda a, b, c: jnp.sum(
+        ref.neighbor_attn_ref(a, b, c, valid) ** 2), argnums=(0, 1, 2))(q, kk, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_ssd_chunk_gradients_match_oracle():
+    rng = np.random.default_rng(24)
+    g_, l, n, p = 2, 64, 32, 32
+    q = jnp.asarray(rng.normal(size=(g_, l, n)) * 0.1, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(g_, l, n)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(g_, l, p)) * 0.1, jnp.float32)
+    lcum = jnp.cumsum(
+        jnp.asarray(-np.abs(rng.normal(size=(g_, l)) * 0.05), jnp.float32), -1)
+    h0 = jnp.asarray(rng.normal(size=(g_, n, p)) * 0.1, jnp.float32)
+
+    def loss_k(*a):
+        y, h1 = ops.ssd_chunk(*a, interpret=True)
+        return jnp.sum(y ** 2) + jnp.sum(h1 ** 2)
+
+    def loss_r(*a):
+        y, h1 = jax.vmap(ref.ssd_chunk_ref)(*a)
+        return jnp.sum(y ** 2) + jnp.sum(h1 ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2, 3, 4))(q, k, v, lcum, h0)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2, 3, 4))(q, k, v, lcum, h0)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,93 @@
+"""End-to-end system tests: the paper's training pipeline on synthetic data.
+
+These are the integration gates — a TGN-PRES model must actually LEARN
+(AP well above chance) and the PRES path must not break learning at a
+large temporal batch size."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.graph import datasets
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.train import loop
+
+
+def _run(stream, spec, variant="tgn", use_pres=False, batch_size=100,
+         epochs=3, seed=0, beta=0.1):
+    cfg = MDGNNConfig(variant=variant, n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=32, d_msg=32, d_time=16,
+                      d_embed=32, n_neighbors=8, use_pres=use_pres, beta=beta)
+    key = jax.random.PRNGKey(seed)
+    params, _ = mdgnn.init_params(key, cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    opt_state = opt.init(params)
+    batches = stream.temporal_batches(batch_size)
+    step = loop.make_train_step(cfg, opt)
+    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+    results = []
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, res = loop.run_epoch(
+            params, opt_state, state, batches, cfg, step, sub, dst_range)
+        results.append(res)
+    return results
+
+
+@pytest.fixture(scope="module")
+def train_setup():
+    spec = datasets.SyntheticSpec("sys", 120, 60, 3000, 8)
+    stream = datasets.generate(spec, seed=0)
+    return stream, spec
+
+
+def test_tgn_learns_above_chance(train_setup):
+    stream, spec = train_setup
+    results = _run(stream, spec, "tgn", use_pres=False, epochs=3)
+    assert results[-1].ap > 0.6, [r.ap for r in results]
+    # training improves over the first epoch
+    assert results[-1].ap > results[0].ap - 0.02
+
+
+def test_pres_mitigates_large_batch_degradation(train_setup):
+    """The paper's mechanism (Fig. 4): at a 4x temporal batch, training WITH
+    PRES must dominate training WITHOUT it — both in first-epoch statistical
+    efficiency and in final AP. (Full parity with the small-batch baseline
+    needs the paper's 50-epoch budget; benchmarks/ runs that comparison.)"""
+    stream, spec = train_setup
+    std = _run(stream, spec, "tgn", use_pres=False, batch_size=400, epochs=3)
+    prs = _run(stream, spec, "tgn", use_pres=True, batch_size=400, epochs=3)
+    mean = lambda rs: sum(r.ap for r in rs) / len(rs)
+    assert prs[0].ap > std[0].ap + 0.02, (prs[0].ap, std[0].ap)
+    assert mean(prs) > mean(std) + 0.01, (mean(prs), mean(std))
+    assert prs[-1].ap > 0.55
+
+
+def test_eval_pipeline_chronological_split(train_setup):
+    stream, spec = train_setup
+    train, val, _ = stream.chronological_split(0.7, 0.15)
+    cfg = MDGNNConfig(variant="tgn", n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=32, d_msg=32, d_time=16,
+                      d_embed=32, n_neighbors=8)
+    key = jax.random.PRNGKey(0)
+    params, _ = mdgnn.init_params(key, cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    opt_state = opt.init(params)
+    step = loop.make_train_step(cfg, opt)
+    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+    batches = train.temporal_batches(100)
+    for _ in range(2):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, _ = loop.run_epoch(
+            params, opt_state, state, batches, cfg, step, sub, dst_range)
+    eval_step = loop.make_eval_step(cfg)
+    state, ap, auc = loop.evaluate(params, state, val.temporal_batches(100),
+                                   cfg, eval_step, key, dst_range)
+    assert 0.0 <= ap <= 1.0 and 0.0 <= auc <= 1.0
+    assert ap > 0.5   # generalizes above chance to unseen future events
