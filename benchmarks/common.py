@@ -45,10 +45,12 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
               batch_size=100, epochs=3, seed=0, beta=0.1,
               pres_scale="count", delta_mode="transition",
               use_smoothing=None, collect_per_batch=False,
-              d_mem=32) -> RunResult:
+              d_mem=32, n_layers=1, n_heads=2,
+              use_kernels=False) -> RunResult:
     cfg = MDGNNConfig(
         variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
+        n_layers=n_layers, n_heads=n_heads, use_kernels=use_kernels,
         use_pres=use_pres, use_smoothing=use_smoothing, beta=beta,
         pres_scale=pres_scale, delta_mode=delta_mode)
     key = jax.random.PRNGKey(seed)

@@ -1,0 +1,53 @@
+"""Embedding-depth sweep: throughput + AP for the L-hop attention stack.
+
+Sweeps layers x temporal batch size x Pallas-kernel routing for the TGN-PRES
+model (the registry's `tgn_attn` embedding, docs/DESIGN.md §Embedding
+stack) and reports steady-state events/sec, compile time, and final AP.
+The layers=1 rows reproduce the historical 1-hop engine; layers=2 is the
+TGL/DistTGL production depth the multi-layer refactor unlocks.
+
+On this CPU container the kernel rows run in interpret mode, so their
+timings measure plumbing, not Mosaic performance — the interesting CPU
+numbers are the layers scaling and the kernel-path AP parity (allclose to
+the reference path).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(fast: bool = False, seeds: int | None = None):
+    n_events = 2000 if fast else 6000
+    epochs = 1 if fast else 2
+    n_seeds = seeds or 1
+    stream, spec = common.bench_stream(n_events=n_events)
+    rows = []
+    for n_layers in (1, 2):
+        for batch_size in ((200,) if fast else (100, 400)):
+            for use_kernels in (False, True):
+                secs, comps, aps = [], [], []
+                for seed in range(n_seeds):
+                    res = common.train_run(
+                        stream, spec, variant="tgn", use_pres=True,
+                        batch_size=batch_size, epochs=epochs, seed=seed,
+                        n_layers=n_layers, use_kernels=use_kernels)
+                    secs.append(float(np.mean(res.epoch_seconds)))
+                    comps.append(res.compile_seconds)
+                    aps.append(res.aps[-1])
+                sec = float(np.mean(secs))
+                rows.append({
+                    "layers": n_layers,
+                    "batch_size": batch_size,
+                    "kernels": int(use_kernels),
+                    "events_per_sec": (len(stream) / sec) if sec > 0 else 0.0,
+                    "epoch_seconds": sec,
+                    "compile_seconds": float(np.mean(comps)),
+                    "final_ap": float(np.mean(aps)),
+                })
+    common.emit("fig_embed_depth", rows)
+
+
+if __name__ == "__main__":
+    run()

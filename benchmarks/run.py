@@ -10,6 +10,7 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
   fig16_extended   Fig. 16     extended training closes small AP gaps
   fig17_ablation   Fig. 17     PRES-S / PRES-V / full / paper-literal scale
   buckets_ablation Sec. 5.3    AP vs anchor-bucket count (tracker squeeze)
+  fig_embed_depth  (engine)    events/sec: embed layers x batch x kernels
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   roofline         §Roofline   dry-run roofline table consolidation
 
@@ -32,6 +33,7 @@ BENCHES = [
     "fig16_extended",
     "fig17_ablation",
     "buckets_ablation",
+    "fig_embed_depth",
     "kernels_micro",
     "roofline",
 ]

@@ -11,6 +11,7 @@ CONFIG = MDGNNConfig(
     d_edge=16,
     d_mem=100, d_msg=100, d_time=32, d_embed=100,
     n_neighbors=10,
+    n_layers=1,          # paper's ablation default (1-hop attention)
     use_pres=True,
     beta=0.1,            # paper's beta
 )
@@ -21,6 +22,7 @@ PRODUCTION = MDGNNConfig(
     d_edge=172,          # wiki/reddit edge-feature width
     d_mem=128, d_msg=128, d_time=64, d_embed=128,
     n_neighbors=16,
+    n_layers=2,          # 2-hop attention: the TGL/DistTGL production depth
     use_pres=True,
     beta=0.1,
 )

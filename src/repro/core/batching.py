@@ -103,16 +103,24 @@ def init_neighbors(n_nodes: int, k: int):
 NEIGHBOR_AXES = {"nbr": ("nodes", None), "t": ("nodes", None), "ptr": ("nodes",)}
 
 
-def update_neighbors(state, batch: EventBatch):
-    """Append each event's endpoints to each other's ring buffers. Multiple
-    same-node occurrences within the batch land in consecutive slots
-    (per-node rank via sort), preserving within-batch order."""
-    from repro.train import annotate
-    k = state["nbr"].shape[1]
-    n = state["nbr"].shape[0]
-    nodes, times, other, _, mask = node_occurrences(batch)
-    nodes, times = annotate.compact(nodes), annotate.compact(times)
-    other, mask = annotate.compact(other), annotate.compact(mask)
+def ring_buffer_append(buffers, ptr, nodes, values, mask):
+    """Scatter per-occurrence rows into per-node ring buffers.
+
+    The shared scatter machinery behind the neighbour ring buffers and the
+    APAN mailbox (docs/DESIGN.md §Embedding stack): multiple same-node
+    occurrences within a batch land in consecutive slots (per-node rank via a
+    stable sort), preserving within-batch order; masked rows are dropped via
+    an out-of-range dump slot.
+
+    buffers: dict name -> (N, K, ...) ring arrays sharing one write pointer
+    ptr:     (N,) int32 next-slot pointer
+    nodes:   (M,) int32 target node per row
+    values:  dict name -> (M, ...) rows to append (keys must match buffers)
+    mask:    (M,) bool row validity
+    Returns (new_buffers, new_ptr).
+    """
+    probe = next(iter(buffers.values()))
+    n, k = probe.shape[0], probe.shape[1]
     m = nodes.shape[0]
     # rank of each occurrence within its node (in array order = time order)
     order = jnp.argsort(jnp.where(mask, nodes, n), stable=True)
@@ -120,15 +128,69 @@ def update_neighbors(state, batch: EventBatch):
     start = jnp.searchsorted(sorted_nodes, jnp.arange(n + 1))
     rank_sorted = jnp.arange(m) - start[sorted_nodes]
     rank = jnp.zeros(m, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
-    slot = (state["ptr"][nodes] + rank) % k
+    slot = (ptr[nodes] + rank) % k
     flat = jnp.where(mask, nodes * k + slot, n * k)
-    nbr = state["nbr"].reshape(-1)
-    nbr = jnp.concatenate([nbr, jnp.zeros((1,), nbr.dtype)])
-    nbr = nbr.at[flat].set(other, mode="drop")[:-1].reshape(n, k)
-    tb = state["t"].reshape(-1)
-    tb = jnp.concatenate([tb, jnp.zeros((1,), tb.dtype)])
-    tb = tb.at[flat].set(times, mode="drop")[:-1].reshape(n, k)
+    out = {}
+    for name, buf in buffers.items():
+        tail = buf.shape[2:]
+        fb = buf.reshape((n * k,) + tail)
+        fb = jnp.concatenate([fb, jnp.zeros((1,) + tail, fb.dtype)])
+        out[name] = (fb.at[flat].set(values[name].astype(fb.dtype),
+                                     mode="drop")[:-1]
+                     .reshape((n, k) + tail))
     counts = jax.ops.segment_sum(mask.astype(jnp.int32),
-                                 jnp.where(mask, nodes, n), num_segments=n + 1)[:n]
-    ptr = (state["ptr"] + counts) % k
-    return {"nbr": nbr, "t": tb, "ptr": ptr}
+                                 jnp.where(mask, nodes, n),
+                                 num_segments=n + 1)[:n]
+    return out, (ptr + counts) % k
+
+
+def update_neighbors(state, batch: EventBatch):
+    """Append each event's endpoints to each other's ring buffers."""
+    from repro.train import annotate
+    nodes, times, other, _, mask = node_occurrences(batch)
+    nodes, times = annotate.compact(nodes), annotate.compact(times)
+    other, mask = annotate.compact(other), annotate.compact(mask)
+    bufs, ptr = ring_buffer_append(
+        {"nbr": state["nbr"], "t": state["t"]}, state["ptr"],
+        nodes, {"nbr": other, "t": times}, mask)
+    return {"nbr": bufs["nbr"], "t": bufs["t"], "ptr": ptr}
+
+
+# ---------------------------------------------------------------------------
+# K-hop frontier expansion (multi-layer EMBEDDING support)
+# ---------------------------------------------------------------------------
+
+
+def gather_frontier(neighbors, nodes):
+    """One-hop temporal neighbourhood of `nodes` from the ring buffers.
+
+    Returns (nbr (M, K) int32 with -1 for empty slots, t (M, K) fp32 edge
+    times, valid (M, K) bool). Gathered rows are pinned to the event axes so
+    the distributed spec shards the hop gathers (docs/DESIGN.md §Sharding).
+    """
+    from repro.train import annotate
+    nbr = annotate.events(neighbors["nbr"][nodes])
+    t = annotate.events(neighbors["t"][nodes])
+    return nbr, t, nbr >= 0
+
+
+def expand_frontiers(neighbors, nodes, t_query, n_hops: int):
+    """Recursive k-hop frontier expansion with STATIC (M * K**d,) shapes.
+
+    hop d of the returned list describes the depth-d frontier:
+      {"nodes": (M*K**d,) int32 (empty slots clamped to 0),
+       "t":     (M*K**d,) fp32 query time of each frontier entry,
+       "valid": (M*K**(d-1), K) bool — only for d >= 1}
+
+    hop 0 is the seed set at the caller's query times; hop d>0 entries carry
+    the ring-buffer edge time of the interaction that made them a neighbour,
+    which is the query time for the next-deeper recursion (the TGN recursive
+    embedding semantics, docs/DESIGN.md §Embedding stack). Everything is a
+    fixed-shape gather, so the whole expansion stays jittable.
+    """
+    hops = [{"nodes": nodes, "t": t_query}]
+    for _ in range(n_hops):
+        nbr, t, valid = gather_frontier(neighbors, hops[-1]["nodes"])
+        hops.append({"nodes": jnp.maximum(nbr, 0).reshape(-1),
+                     "t": t.reshape(-1), "valid": valid})
+    return hops

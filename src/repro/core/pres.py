@@ -71,7 +71,7 @@ def predict(state: PresState, s_prev, dt, nodes, *, key=None, clip: float = 5.0)
     s_prev: (M, D) previous memory rows; dt: (M,); nodes: (M,) node ids.
     Deterministic mixture mean unless a PRNG key is provided.
 
-    Stability note (documented in DESIGN.md): the GMM tracks per-unit-time
+    Stability note (documented in docs/DESIGN.md §PRES): the GMM tracks per-unit-time
     deltas (rates), and the extrapolated contribution dt * delta is clipped
     elementwise to +-clip — inter-event gaps are heavy-tailed, and an
     unclipped linear extrapolation over a long gap diverges."""
@@ -138,7 +138,7 @@ def filter_memory(params, pres_state: PresState, *, nodes, s_prev, s_meas,
     s_pred = predict(pres_state, s_prev, dt, nodes, key=key)
     s_fused = correct(params, s_pred, s_meas)
     # Both modes track per-unit-time deltas so Eq. 7's (t2-t1)*delta_s
-    # extrapolation is dimensionally consistent (see DESIGN.md).
+    # extrapolation is dimensionally consistent (see docs/DESIGN.md §PRES).
     if delta_mode == "innovation":       # Eq. 9 main text
         delta = (s_fused - s_pred) / jnp.maximum(dt, 1.0)[:, None]
     elif delta_mode == "transition":     # Alg. 2 variant

@@ -30,7 +30,8 @@ def serve_mdgnn(args):
     stream = datasets.get_dataset(args.dataset, args.seed)
     dst_range = (spec.n_users, spec.n_users + spec.n_items)
     cfg = MDGNNConfig(variant=args.model, n_nodes=stream.num_nodes,
-                      d_edge=stream.feat_dim, use_pres=args.pres)
+                      d_edge=stream.feat_dim, n_layers=args.n_layers,
+                      use_pres=args.pres)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
     state = init_state(cfg)
@@ -84,6 +85,8 @@ def main(argv=None):
     ap.add_argument("--dataset", default="wiki-small", choices=list(SPECS))
     ap.add_argument("--model", default="tgn", choices=["tgn", "jodie", "apan"])
     ap.add_argument("--pres", action="store_true")
+    ap.add_argument("--n-layers", type=int, default=1,
+                    help="embedding depth (hops for tgn)")
     ap.add_argument("--batch-size", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--zoo", default=None, help="serve a zoo arch instead")

@@ -39,9 +39,15 @@ def main(argv=None):
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--d-mem", type=int, default=100)
+    ap.add_argument("--n-layers", type=int, default=1,
+                    help="embedding depth: hops of temporal attention (tgn) "
+                         "or stacked layers (jodie/apan)")
+    ap.add_argument("--n-heads", type=int, default=2,
+                    help="attention heads in the embedding stack")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernels", action="store_true",
-                    help="route the GRU through the Pallas kernel")
+                    help="route the memory GRU and the embedding attention "
+                         "through the Pallas kernels")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -60,6 +66,7 @@ def main(argv=None):
     cfg = MDGNNConfig(
         variant=args.model, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=args.d_mem, d_msg=args.d_mem, d_embed=args.d_mem,
+        n_layers=args.n_layers, n_heads=args.n_heads,
         use_pres=args.pres, beta=args.beta, delta_mode=args.delta_mode,
         pres_scale=args.pres_scale, use_kernels=args.use_kernels)
     key = jax.random.PRNGKey(args.seed)
@@ -67,11 +74,9 @@ def main(argv=None):
     state = init_state(cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
-    gru_fn = None
-    if args.use_kernels:
-        from repro.kernels import ops as kops
-        gru_fn = kops.gru_cell_params
-    train_step = loop.make_train_step(cfg, opt, gru_fn=gru_fn)
+    # cfg.use_kernels routes both the memory GRU and the embedding attention
+    # through the Pallas kernels inside make_train_step / embed_nodes
+    train_step = loop.make_train_step(cfg, opt)
     eval_step = loop.make_eval_step(cfg)
 
     batches = train_s.temporal_batches(args.batch_size)

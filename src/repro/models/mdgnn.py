@@ -3,11 +3,16 @@
 The engine implements the shared MESSAGE -> MEMORY -> EMBEDDING pipeline with
 batch-parallel semantics (the paper's temporal-discontinuity regime), the
 sequential oracle (events processed one at a time — the "true" dynamics), and
-the PRES hooks. Model variants differ in their EMBEDDING module:
+the PRES hooks. Model variants differ in their EMBEDDING module, which is
+resolved through the pluggable registry in `repro.models.embeddings`
+(docs/DESIGN.md §Embedding stack):
 
-    TGN   — temporal graph attention over the neighbour ring buffer
+    TGN   — L-hop multi-head temporal graph attention over the neighbour
+            ring buffers (cfg.n_layers hops, cfg.n_heads heads; the inner
+            attention loop routes through the Pallas kernel
+            `kernels/ops.py::neighbor_attn` when cfg.use_kernels)
     JODIE — time-projection embedding  h = (1 + dt*w) . s
-    APAN  — attention over a per-node mailbox of propagated messages
+    APAN  — stacked attention over a per-node mailbox of propagated messages
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from repro.core import batching, coherence, pres
 from repro.core.pres import PresState
 from repro.train import annotate
 from repro.graph.events import EventBatch
+from repro.models import embeddings as embeddings_lib
 from repro.models import modules
 from repro.models.modules import MemoryState
 from repro.nn.module import ParamBuilder
@@ -36,6 +42,8 @@ class MDGNNConfig:
     d_time: int = 32
     d_embed: int = 100
     n_neighbors: int = 10
+    n_layers: int = 1            # EMBEDDING depth: hops for tgn, stacked
+                                 # layers for jodie/apan (docs/DESIGN.md)
     n_heads: int = 2
     mailbox_size: int = 10       # APAN
     memory_cell: str = "gru"
@@ -55,10 +63,10 @@ class MDGNNConfig:
     # Sec. 5.3 anchor-set approximation, TPU-shaped: GMM trackers are kept
     # for pres_buckets hash buckets (node -> node % pres_buckets) instead of
     # per node. None -> exact per-node trackers. Cuts tracker state and its
-    # distributed-combine wire bytes by N/buckets (EXPERIMENTS.md §Perf).
+    # distributed-combine wire bytes by N/buckets (docs/EXPERIMENTS.md §Perf).
     pres_buckets: int | None = None
     # bf16 memory table halves HBM + collective bytes for the table at
-    # production scale; compute stays fp32 (EXPERIMENTS.md §Perf iter. 6)
+    # production scale; compute stays fp32 (docs/EXPERIMENTS.md §Perf iter. 6)
     mem_dtype: str = "float32"
     use_kernels: bool = False    # route GRU/filter through Pallas kernels
 
@@ -74,23 +82,9 @@ def init_params(key, cfg: MDGNNConfig):
     modules.message_init(b, "msg", cfg.d_mem, cfg.d_edge, cfg.d_time, cfg.d_msg)
     cell_init, _ = modules.MEMORY_CELLS[cfg.memory_cell]
     cell_init(b, "mem", cfg.d_msg, cfg.d_mem)
-    emb = b.sub("emb")
-    if cfg.variant == "tgn":
-        d = cfg.d_mem
-        emb.add("wq", (d, cfg.d_embed), ("embed", "mlp"))
-        emb.add("wk", (d + cfg.d_time, cfg.d_embed), ("embed", "mlp"))
-        emb.add("wv", (d + cfg.d_time, cfg.d_embed), ("embed", "mlp"))
-        emb.add("wo", (cfg.d_embed + d, cfg.d_embed), ("embed", "mlp"))
-    elif cfg.variant == "jodie":
-        emb.add("w_proj", (1, cfg.d_mem), (None, "embed"))
-        emb.add("w_out", (cfg.d_mem, cfg.d_embed), ("embed", "mlp"))
-    elif cfg.variant == "apan":
-        emb.add("wq", (cfg.d_mem, cfg.d_embed), ("embed", "mlp"))
-        emb.add("wk", (cfg.d_msg, cfg.d_embed), ("embed", "mlp"))
-        emb.add("wv", (cfg.d_msg, cfg.d_embed), ("embed", "mlp"))
-        emb.add("wo", (cfg.d_embed + cfg.d_mem, cfg.d_embed), ("embed", "mlp"))
-    else:
-        raise ValueError(cfg.variant)
+    # EMBEDDING params come from the pluggable registry: per-layer subtrees
+    # emb/l<i>/... with ("embed", "mlp") logical axes (docs/DESIGN.md).
+    embeddings_lib.get_embedding(cfg).init(b.sub("emb"), cfg)
     dec = b.sub("dec")
     dec.add("w1", (2 * cfg.d_embed, cfg.d_embed), ("embed", "mlp"))
     dec.add("b1", (cfg.d_embed,), ("mlp",), init="zeros")
@@ -176,7 +170,7 @@ def memory_update(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBatch,
     needed by PRES and the coherence loss. With defer_write=True the mem
     table write is skipped (PRES overwrites the same rows with the fused
     values — writing twice costs a full extra scatter+combine at production
-    scale, EXPERIMENTS.md §Perf iteration 5)."""
+    scale, docs/EXPERIMENTS.md §Perf iteration 5)."""
     nodes, times, msgs, mask = compute_messages(params, cfg, mem, batch)
     if cfg.aggregator == "mean":
         mean_n, _ = batching.mean_per_node(nodes, msgs, mask, cfg.n_nodes)
@@ -248,67 +242,26 @@ def sequential_memory_update(params, cfg: MDGNNConfig, mem: MemoryState,
 
 
 def embed_nodes(params, cfg: MDGNNConfig, state, nodes, t_query):
-    """Dynamic embeddings h_i(t) for the given node ids at query times."""
-    mem: MemoryState = state["memory"]
-    s = annotate.events(mem.mem[nodes]).astype(jnp.float32)
-    e = params["emb"]
-    if cfg.variant == "jodie":
-        dt = (t_query - annotate.events(mem.last_update[nodes]))[:, None]
-        proj = s * (1.0 + dt * e["w_proj"][0])
-        return jnp.tanh(proj @ e["w_out"])
-    if cfg.variant == "tgn":
-        nbrs = annotate.events(state["neighbors"]["nbr"][nodes])   # (M, K)
-        nbr_t = annotate.events(state["neighbors"]["t"][nodes])    # (M, K)
-        valid = nbrs >= 0
-        s_nbr = annotate.events(
-            mem.mem[jnp.maximum(nbrs, 0)]).astype(jnp.float32)  # (M, K, D)
-        dt = t_query[:, None] - nbr_t
-        t_enc = modules.time_encode(params["time"], dt)  # (M, K, d_time)
-        kv_in = jnp.concatenate([s_nbr, t_enc], axis=-1)
-        q = s @ e["wq"]                                  # (M, E)
-        k = kv_in @ e["wk"]
-        v = kv_in @ e["wv"]
-        scores = jnp.einsum("me,mke->mk", q, k) / jnp.sqrt(q.shape[-1])
-        scores = jnp.where(valid, scores, -1e30)
-        probs = jax.nn.softmax(scores, axis=-1)
-        probs = jnp.where(jnp.any(valid, -1, keepdims=True), probs, 0.0)
-        agg = jnp.einsum("mk,mke->me", probs, v)
-        return jax.nn.relu(jnp.concatenate([agg, s], -1) @ e["wo"])
-    if cfg.variant == "apan":
-        mb = state["mailbox"]
-        msgs = annotate.events(mb["msg"][nodes])         # (M, Km, d_msg)
-        q = s @ e["wq"]
-        k = msgs @ e["wk"]
-        v = msgs @ e["wv"]
-        scores = jnp.einsum("me,mke->mk", q, k) / jnp.sqrt(q.shape[-1])
-        probs = jax.nn.softmax(scores, axis=-1)
-        agg = jnp.einsum("mk,mke->me", probs, v)
-        return jax.nn.relu(jnp.concatenate([agg, s], -1) @ e["wo"])
-    raise ValueError(cfg.variant)
+    """Dynamic embeddings h_i(t) for the given node ids at query times.
+
+    Thin dispatch into the pluggable registry (repro.models.embeddings):
+    the variant's embedding runs cfg.n_layers layers / hops with
+    cfg.n_heads attention heads, routing the attention inner loop through
+    the Pallas kernel when cfg.use_kernels (docs/DESIGN.md §Embedding
+    stack)."""
+    return embeddings_lib.get_embedding(cfg).apply(params, cfg, state,
+                                                   nodes, t_query)
 
 
 def update_mailbox(cfg: MDGNNConfig, mailbox, nodes, msgs, times, mask):
     """APAN: append each occurrence's message to the node's own mailbox ring
-    (asynchronous propagation — endpoints receive each other's messages)."""
-    km = mailbox["msg"].shape[1]
-    n = mailbox["msg"].shape[0]
-    m = nodes.shape[0]
-    order = jnp.argsort(jnp.where(mask, nodes, n), stable=True)
-    sorted_nodes = nodes[order]
-    start = jnp.searchsorted(sorted_nodes, jnp.arange(n + 1))
-    rank_sorted = jnp.arange(m) - start[sorted_nodes]
-    rank = jnp.zeros(m, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
-    slot = (mailbox["ptr"][nodes] + rank) % km
-    flat = jnp.where(mask, nodes * km + slot, n * km)
-    buf = mailbox["msg"].reshape(-1, msgs.shape[-1])
-    buf = jnp.concatenate([buf, jnp.zeros((1, msgs.shape[-1]), buf.dtype)])
-    buf = buf.at[flat].set(msgs, mode="drop")[:-1].reshape(n, km, -1)
-    tb = mailbox["t"].reshape(-1)
-    tb = jnp.concatenate([tb, jnp.zeros((1,), tb.dtype)])
-    tb = tb.at[flat].set(times, mode="drop")[:-1].reshape(n, km)
-    counts = jax.ops.segment_sum(mask.astype(jnp.int32),
-                                 jnp.where(mask, nodes, n), num_segments=n + 1)[:n]
-    return {"msg": buf, "t": tb, "ptr": (mailbox["ptr"] + counts) % km}
+    (asynchronous propagation — endpoints receive each other's messages).
+    Shares the ring scatter machinery with the neighbour buffers
+    (`core/batching.py::ring_buffer_append`)."""
+    bufs, ptr = batching.ring_buffer_append(
+        {"msg": mailbox["msg"], "t": mailbox["t"]}, mailbox["ptr"],
+        nodes, {"msg": msgs, "t": times}, mask)
+    return {"msg": bufs["msg"], "t": bufs["t"], "ptr": ptr}
 
 
 # ---------------------------------------------------------------------------

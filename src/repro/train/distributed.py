@@ -1,13 +1,13 @@
 """Distributed MDGNN training (pjit): the paper's workload at production
 scale on the 256/512-chip mesh.
 
-Sharding scheme (DESIGN.md §3):
+Sharding scheme (docs/DESIGN.md §Sharding):
   * memory table S (N, D), last-update times, PRES trackers, neighbour ring
     buffers — row-sharded over the ("pod","data") axes ("nodes" logical axis)
   * temporal-batch events — sharded over the same axes ("event" logical axis)
   * model parameters — replicated (they are MLP/GRU-sized)
 GSPMD inserts the gather/scatter collectives for memory-row access; driving
-those down is hillclimb material in EXPERIMENTS.md §Perf.
+those down is hillclimb material in docs/EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
@@ -59,7 +59,7 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
     strategy:
       "gspmd"          — paper-faithful baseline: node-sharded state; GSPMD
                          inserts the memory gather/scatter collectives.
-      "compact_update" — beyond-paper (EXPERIMENTS.md §Perf): replicate the
+      "compact_update" — beyond-paper (docs/EXPERIMENTS.md §Perf): replicate the
                          memory/state tables and explicitly all-gather only
                          the COMPACT per-occurrence update arrays at the
                          scatter boundaries (repro.train.annotate) so the

@@ -32,7 +32,7 @@ def _apply_pres(params, cfg, mem2, info, pres_state):
     Eq. 7 scale: "count" extrapolates by the node's pending-event count in
     the batch — the number of sequential GRU transitions flattened into one
     by batch processing. MDGNN memory moves per EVENT, not per unit time, so
-    this directly reconstructs the missed accumulation (EXPERIMENTS.md
+    this directly reconstructs the missed accumulation (docs/EXPERIMENTS.md
     §Paper-validation compares it against the paper-literal "time" scale)."""
     if cfg.pres_scale == "count":
         counts = jax.ops.segment_sum(
@@ -64,7 +64,15 @@ def _apply_pres(params, cfg, mem2, info, pres_state):
 
 
 def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
-    """Returns a jitted train_step closure."""
+    """Returns a jitted train_step closure.
+
+    cfg.use_kernels routes BOTH Pallas hot paths: the memory GRU (gru_fn
+    defaults to the kernel adapter) and the embedding stack's neighbour
+    attention (resolved inside embed_nodes, docs/DESIGN.md §Embedding
+    stack). Pass gru_fn explicitly to override the memory cell only."""
+    if gru_fn is None and cfg.use_kernels and cfg.memory_cell == "gru":
+        from repro.kernels import ops as kops
+        gru_fn = kops.gru_cell_params
 
     def loss_and_state(params, state, prev_batch: EventBatch,
                        pos: EventBatch, neg: EventBatch):
@@ -80,7 +88,7 @@ def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
         # ------------------------------------------------ link prediction --
         # one batched embedding call for all four endpoint sets: one table
         # gather -> ONE cotangent partial per table in the backward pass,
-        # instead of 4x2 table-sized combines (EXPERIMENTS.md §Perf iter. 7)
+        # instead of 4x2 table-sized combines (docs/EXPERIMENTS.md §Perf iter. 7)
         h = mdgnn.embed_nodes(
             params, cfg, state2,
             jnp.concatenate([pos.src, pos.dst, neg.src, neg.dst]),

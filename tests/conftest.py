@@ -1,5 +1,11 @@
 """Shared fixtures. Tests run on the single default CPU device — the 512
-placeholder devices are set ONLY inside repro/launch/dryrun.py (never here)."""
+placeholder devices are set ONLY inside repro/launch/dryrun.py (never here).
+
+Optional-dependency policy: modules that need `hypothesis` guard the import
+with pytest.importorskip (or a no-op decorator fallback in
+test_attention.py), so a container without the dev extras degrades those
+tests to SKIPPED instead of erroring at collection. `pip install -r
+requirements-dev.txt` restores the full property-test sweep."""
 from __future__ import annotations
 
 import numpy as np

@@ -80,9 +80,27 @@ def test_attention_entry_uses_blockwise_consistently():
                                atol=2e-5)
 
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade the property sweep to a skip, keep the rest
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):          # noqa: D103 - no-op decorator stand-ins
+        return lambda f: f
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed "
+                    "(see requirements-dev.txt)")
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000), st.sampled_from([64, 128, 256]),
        st.sampled_from([32, 64]), st.booleans())

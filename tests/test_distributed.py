@@ -57,8 +57,11 @@ def test_mdgnn_train_spec_compiles_debug_mesh():
     from repro.models.mdgnn import MDGNNConfig
     from repro.train.distributed import make_mdgnn_train_spec
 
+    # n_layers=2: the per-layer embedding params (emb/l0, emb/l1 with
+    # ("embed","mlp") axes) and the 2-hop frontier gathers must shard
     cfg = MDGNNConfig(variant="tgn", n_nodes=64, d_edge=8, d_mem=16,
-                      d_msg=16, d_time=8, d_embed=16, use_pres=True)
+                      d_msg=16, d_time=8, d_embed=16, n_layers=2,
+                      use_pres=True)
     mesh = _debug_mesh()
     spec = make_mdgnn_train_spec(cfg, 32, mesh)
     with mesh:
@@ -67,6 +70,10 @@ def test_mdgnn_train_spec_compiles_debug_mesh():
         lowered = jitted.lower(*spec.args)
         compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    # cost_analysis() returns one dict per program on this jaxlib (list),
+    # a bare dict on others — normalize before probing
+    if isinstance(cost, list):
+        cost = cost[0]
     assert float(cost.get("flops", 0)) > 0
 
 

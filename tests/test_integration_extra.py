@@ -41,7 +41,7 @@ def test_empirical_coherence_during_training():
 
     def loss_at(params, mem_rows):
         """decoder loss of batch-1 events at the given endpoint rows."""
-        e = params["emb"]
+        e = params["emb"]["l0"]   # jodie_proj layer-0 params (registry layout)
         h = jnp.tanh((mem_rows * 1.0) @ e["w_out"])
         hs, hd = h[: ev.size], h[ev.size:]
         logits = mdgnn.link_logits(params, hs, hd)

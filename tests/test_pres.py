@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade to skips, not collection errors
 from hypothesis import given, settings, strategies as st
 
 import jax
