@@ -19,7 +19,7 @@ from repro.graph.events import EventStream
 from repro.models import mdgnn
 from repro.models.mdgnn import MDGNNConfig
 from repro.optim import optimizers
-from repro.train import loop
+from repro.train import loop, pipeline
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -46,35 +46,53 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
               pres_scale="count", delta_mode="transition",
               use_smoothing=None, collect_per_batch=False,
               d_mem=32, n_layers=1, n_heads=2,
-              use_kernels=False) -> RunResult:
+              use_kernels=False, pipeline_depth=0,
+              host_prefetch=False) -> RunResult:
     cfg = MDGNNConfig(
         variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
         n_layers=n_layers, n_heads=n_heads, use_kernels=use_kernels,
         use_pres=use_pres, use_smoothing=use_smoothing, beta=beta,
-        pres_scale=pres_scale, delta_mode=delta_mode)
+        pres_scale=pres_scale, delta_mode=delta_mode,
+        pipeline_depth=pipeline_depth)
     key = jax.random.PRNGKey(seed)
     params, _ = mdgnn.init_params(key, cfg)
     state = mdgnn.init_state(cfg)
     opt = optimizers.adamw(1e-3)
     opt_state = opt.init(params)
-    batches = stream.temporal_batches(batch_size)
-    step = loop.make_train_step(cfg, opt)
+    # pipeline facade: depth 0 delegates to the sequential loop (bit-exact);
+    # host_prefetch re-carves batches lazily each epoch on a background
+    # thread instead of materialising the full list up front (fig_pipeline
+    # measures exactly that difference)
+    step = pipeline.make_train_step(cfg, opt)
+    if host_prefetch:
+        make_batches = lambda: stream.prefetch_batches(
+            batch_size, depth=max(2, pipeline_depth))
+        it = stream.iter_temporal_batches(batch_size)
+        warm = (next(it), next(it))
+    else:
+        batches = stream.temporal_batches(batch_size)
+        make_batches = lambda: batches
+        warm = (batches[0], batches[1])
     dst_range = (spec.n_users, spec.n_users + spec.n_items)
 
     # compile (first step) timed separately so epoch_seconds is steady-state
     t0 = time.perf_counter()
     from repro.graph.negatives import sample_negatives
-    neg = sample_negatives(key, batches[1], *dst_range)
-    step(params, opt_state, state, batches[0], batches[1], neg)
+    neg = sample_negatives(key, warm[1], *dst_range)
+    if pipeline_depth:
+        pstate = pipeline.PipelineState.init(state["memory"])
+        step(params, opt_state, state, pstate, warm[0], warm[1], neg)
+    else:
+        step(params, opt_state, state, warm[0], warm[1], neg)
     compile_s = time.perf_counter() - t0
 
     aps, losses, secs, per_batch = [], [], [], []
     for _ in range(epochs):
         key, sub = jax.random.split(key)
-        params, opt_state, state, res = loop.run_epoch(
-            params, opt_state, state, batches, cfg, step, sub, dst_range,
-            collect_logits=collect_per_batch)
+        params, opt_state, state, res = pipeline.run_epoch(
+            params, opt_state, state, make_batches(), cfg, step, sub,
+            dst_range, collect_logits=collect_per_batch)
         aps.append(res.ap)
         losses.append(res.loss)
         secs.append(res.seconds)

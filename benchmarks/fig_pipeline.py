@@ -1,0 +1,47 @@
+"""Staleness-aware pipelined schedule sweep (docs/PIPELINE.md §Measured).
+
+Events/sec and AP for pipeline_depth 0/1/2/4 against the strictly
+sequential baseline (depth 0 IS the baseline — the facade delegates to the
+historical loop, bit-exact). Depth >= 1 additionally prefetches batches on
+a host thread and defers the per-step host sync to epoch end, so the
+speed-up here measures the host-side overlap; the staleness cost shows up
+as the AP delta.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+DEPTHS = (0, 1, 2, 4)
+
+
+def run(fast: bool = False, seeds: int | None = None):
+    n_events = 3000 if fast else 6000
+    epochs = 2 if fast else 4
+    batch_size = 200
+    stream, spec = common.bench_stream(n_events=n_events)
+    rows = []
+    for depth in DEPTHS:
+        res = common.train_run(
+            stream, spec, variant="tgn", use_pres=True, batch_size=batch_size,
+            epochs=epochs, d_mem=32, pipeline_depth=depth,
+            host_prefetch=depth > 0)
+        # steady state: skip the first epoch (tracker warm-up + caches)
+        steady = res.epoch_seconds[1:] or res.epoch_seconds
+        sec, _ = common.mean_std(steady)
+        rows.append({
+            "schedule": "sequential" if depth == 0 else f"pipelined(K={depth})",
+            "pipeline_depth": depth,
+            "events_per_sec": n_events / sec,
+            "epoch_seconds": sec,
+            "compile_seconds": res.compile_seconds,
+            "ap_final": res.aps[-1],
+            "loss_final": res.losses[-1],
+        })
+    base = rows[0]["events_per_sec"]
+    for r in rows:
+        r["speedup_vs_sequential"] = r["events_per_sec"] / base
+    common.emit("fig_pipeline", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,8 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
   fig17_ablation   Fig. 17     PRES-S / PRES-V / full / paper-literal scale
   buckets_ablation Sec. 5.3    AP vs anchor-bucket count (tracker squeeze)
   fig_embed_depth  (engine)    events/sec: embed layers x batch x kernels
+  fig_pipeline     (engine)    events/sec + AP: pipeline_depth 0/1/2/4 vs
+                               the sequential baseline (docs/PIPELINE.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   roofline         §Roofline   dry-run roofline table consolidation
 
@@ -34,6 +36,7 @@ BENCHES = [
     "fig17_ablation",
     "buckets_ablation",
     "fig_embed_depth",
+    "fig_pipeline",
     "kernels_micro",
     "roofline",
 ]

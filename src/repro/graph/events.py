@@ -8,6 +8,11 @@ carved out for training (the paper's temporal batches B_1..B_K).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import queue
+import threading
+import weakref
+from typing import Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +32,20 @@ class EventBatch:
     @property
     def size(self) -> int:
         return self.src.shape[0]
+
+    @staticmethod
+    @functools.lru_cache(maxsize=None)
+    def struct(batch_size: int, d_edge: int) -> "EventBatch":
+        """Abstract (ShapeDtypeStruct) batch — the static-shape contract every
+        padded batch of this (b, F) satisfies. Cached so spec builders and the
+        pipelined trainer share one struct per shape (docs/PIPELINE.md)."""
+        return EventBatch(
+            src=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            dst=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            t=jax.ShapeDtypeStruct((batch_size,), jnp.float32),
+            feat=jax.ShapeDtypeStruct((batch_size, d_edge), jnp.float32),
+            mask=jax.ShapeDtypeStruct((batch_size,), jnp.bool_),
+        )
 
 
 @dataclasses.dataclass
@@ -55,22 +74,120 @@ class EventStream:
         i1, i2 = int(n * train), int(n * (train + val))
         return self.slice(0, i1), self.slice(i1, i2), self.slice(i2, n)
 
-    def temporal_batches(self, batch_size: int) -> list[EventBatch]:
-        """Partition into K = ceil(|E|/b) temporal batches (last one padded)."""
-        out = []
+    def num_batches(self, batch_size: int) -> int:
+        return -(-len(self) // batch_size)
+
+    def iter_temporal_batches(self, batch_size: int) -> Iterator[EventBatch]:
+        """Lazily carve fixed-size temporal batches (last one zero-padded).
+
+        Every batch has the same static shapes (`EventBatch.struct`), so one
+        jitted step serves the whole stream. Padding buffers come from a
+        shared zero-template cache — the host-side batch-prep cost is the
+        slices + device puts, which the pipelined trainer overlaps with
+        device compute via `prefetch` (docs/PIPELINE.md §Host prefetch)."""
         for lo in range(0, len(self), batch_size):
             hi = min(lo + batch_size, len(self))
             pad = batch_size - (hi - lo)
-            mk = lambda a: np.concatenate([a[lo:hi], np.zeros((pad,) + a.shape[1:],
-                                                              a.dtype)]) if pad else a[lo:hi]
-            out.append(EventBatch(
+            mk = lambda a: (np.concatenate([a[lo:hi], _pad_zeros(pad, a)])
+                            if pad else a[lo:hi])
+            yield EventBatch(
                 src=jnp.asarray(mk(self.src), jnp.int32),
                 dst=jnp.asarray(mk(self.dst), jnp.int32),
                 t=jnp.asarray(mk(self.t), jnp.float32),
                 feat=jnp.asarray(mk(self.feat), jnp.float32),
                 mask=jnp.asarray(np.arange(batch_size) < (hi - lo)),
-            ))
-        return out
+            )
+
+    def temporal_batches(self, batch_size: int) -> list[EventBatch]:
+        """Partition into K = ceil(|E|/b) temporal batches (last one padded)."""
+        return list(self.iter_temporal_batches(batch_size))
+
+    def prefetch_batches(self, batch_size: int,
+                         depth: int = 2) -> Iterator[EventBatch]:
+        """Temporal batches with host-side prefetch: a background thread
+        keeps up to `depth` prepared batches ahead of the consumer."""
+        return prefetch(self.iter_temporal_batches(batch_size), depth)
+
+
+@functools.lru_cache(maxsize=None)
+def _pad_zeros_cached(shape: tuple, dtype: str) -> np.ndarray:
+    return np.zeros(shape, dtype)
+
+
+def _pad_zeros(pad: int, like: np.ndarray) -> np.ndarray:
+    """Shared zero padding template (never mutated — np.concatenate copies)."""
+    return _pad_zeros_cached((pad,) + like.shape[1:], like.dtype.str)
+
+
+def _prefetch_put(q: queue.Queue, stop: threading.Event, item) -> bool:
+    """Blocking put that aborts when the consumer closed (or dropped) the
+    iterator — otherwise an abandoned consumer would leave the producer
+    spinning and pin `depth` prepared batches forever."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=0.1)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def _produce(it, q: queue.Queue, stop: threading.Event, done):
+    try:
+        for item in it:
+            if not _prefetch_put(q, stop, item):
+                return
+        _prefetch_put(q, stop, done)
+    except BaseException as e:  # noqa: BLE001 — propagate to consumer
+        _prefetch_put(q, stop, e)
+
+
+class PrefetchIterator:
+    """Wrap an iterator with a daemon producer thread and a bounded queue so
+    batch preparation overlaps consumer-side (device) work.
+
+    Exceptions raised by the source iterator are re-raised at the consumer's
+    next `__next__`. `close()`, exhaustion, or garbage collection of an
+    abandoned iterator stops the producer; the queue bound means at most
+    `depth` prepared items are ever in flight."""
+
+    _DONE = object()
+
+    def __init__(self, source: Iterable, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        # the producer closes over queue/stop (NOT self), so an abandoned
+        # iterator stays collectable and the finalizer stops the thread
+        self._thread = threading.Thread(
+            target=_produce, args=(iter(source), self._queue, self._stop,
+                                   self._DONE), daemon=True)
+        self._thread.start()
+        self._finalizer = weakref.finalize(self, self._stop.set)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
+        item = self._queue.get()
+        if item is self._DONE:
+            self._stop.set()
+            raise StopIteration
+        if isinstance(item, BaseException):
+            self._stop.set()
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def prefetch(source: Iterable, depth: int = 2) -> Iterator:
+    """Background-thread prefetch of `depth` items from `source`."""
+    return PrefetchIterator(source, depth)
 
 
 def load_jodie_csv(path: str, num_nodes: int | None = None) -> EventStream:

@@ -188,7 +188,8 @@ def run_pair(arch_id: str, shape_name: str, multi_pod: bool,
     t0 = time.perf_counter()
     with mesh:
         jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
-                         out_shardings=spec.out_shardings)
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=spec.donate_argnums)
         lowered = jitted.lower(*spec.args)
         t_lower = time.perf_counter() - t0
         compiled = lowered.compile()

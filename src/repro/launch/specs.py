@@ -62,6 +62,11 @@ class LoweredSpec:
     args: tuple             # ShapeDtypeStructs / abstract values
     in_shardings: tuple
     out_shardings: Any
+    # argnums whose buffers the step may reuse in place (state-in/state-out
+    # pairs with identical shardings — e.g. the pipelined MDGNN step donates
+    # opt/model/pipeline state so XLA aliases the table buffers instead of
+    # double-allocating them, docs/PIPELINE.md §Distributed)
+    donate_argnums: tuple = ()
 
 
 def abstract_init(model: Model, key=None):

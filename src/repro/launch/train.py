@@ -19,7 +19,7 @@ from repro.graph import datasets
 from repro.graph.datasets import SPECS
 from repro.models.mdgnn import MDGNNConfig, init_params, init_state
 from repro.optim import adamw
-from repro.train import loop
+from repro.train import loop, pipeline
 from repro.checkpoint import save_checkpoint
 
 
@@ -48,6 +48,11 @@ def main(argv=None):
     ap.add_argument("--use-kernels", action="store_true",
                     help="route the memory GRU and the embedding attention "
                          "through the Pallas kernels")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="staleness-aware pipelined schedule: the embedding "
+                         "stage reads a memory snapshot at most K batch-"
+                         "writes stale, PRES-predict-filled (docs/PIPELINE.md)"
+                         "; 0 = strictly sequential Alg. 1/2")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -68,27 +73,43 @@ def main(argv=None):
         d_mem=args.d_mem, d_msg=args.d_mem, d_embed=args.d_mem,
         n_layers=args.n_layers, n_heads=args.n_heads,
         use_pres=args.pres, beta=args.beta, delta_mode=args.delta_mode,
-        pres_scale=args.pres_scale, use_kernels=args.use_kernels)
+        pres_scale=args.pres_scale, use_kernels=args.use_kernels,
+        pipeline_depth=args.pipeline_depth)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
     state = init_state(cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
     # cfg.use_kernels routes both the memory GRU and the embedding attention
-    # through the Pallas kernels inside make_train_step / embed_nodes
-    train_step = loop.make_train_step(cfg, opt)
+    # through the Pallas kernels inside make_train_step / embed_nodes;
+    # cfg.pipeline_depth routes through the staleness-aware pipelined
+    # schedule (repro.train.pipeline — depth 0 delegates to the sequential
+    # loop, bit-exact)
+    train_step = pipeline.make_train_step(cfg, opt)
     eval_step = loop.make_eval_step(cfg)
 
-    batches = train_s.temporal_batches(args.batch_size)
+    n_batches = train_s.num_batches(args.batch_size)
+    depth = cfg.pipeline_depth
+    # depth 0 trains from the materialised list (the historical path);
+    # depth >= 1 re-carves batches lazily each epoch with host prefetch,
+    # overlapping batch prep with device compute
+    if depth:
+        make_batches = lambda: train_s.prefetch_batches(
+            args.batch_size, depth=max(2, depth))
+    else:
+        batches = train_s.temporal_batches(args.batch_size)
+        make_batches = lambda: batches
     val_batches = val_s.temporal_batches(args.batch_size)
     history = []
     print(f"[train] {args.model}{'-PRES' if args.pres else ''} on "
-          f"{args.dataset}: {len(train_s)} events, K={len(batches)} batches "
-          f"of b={args.batch_size}")
+          f"{args.dataset}: {len(train_s)} events, K={n_batches} batches "
+          f"of b={args.batch_size}"
+          + (f", pipeline_depth={depth}" if depth else ""))
     for epoch in range(args.epochs):
         key, sub = jax.random.split(key)
-        params, opt_state, state, res = loop.run_epoch(
-            params, opt_state, state, batches, cfg, train_step, sub, dst_range)
+        params, opt_state, state, res = pipeline.run_epoch(
+            params, opt_state, state, make_batches(), cfg, train_step, sub,
+            dst_range)
         key, sub = jax.random.split(key)
         vstate, vap, vauc = loop.evaluate(params, state, val_batches, cfg,
                                           eval_step, sub, dst_range)

@@ -69,6 +69,11 @@ class MDGNNConfig:
     # production scale; compute stays fp32 (docs/EXPERIMENTS.md §Perf iter. 6)
     mem_dtype: str = "float32"
     use_kernels: bool = False    # route GRU/filter through Pallas kernels
+    # Staleness-aware pipelined schedule (docs/PIPELINE.md): the embedding
+    # stage reads a memory snapshot at most `pipeline_depth` batch-writes
+    # stale, with PRES Eq. 7 extrapolation filling the in-flight rows.
+    # 0 = strictly sequential Alg. 1/2 (bit-exact with the historical loop).
+    pipeline_depth: int = 0
 
 
 # ---------------------------------------------------------------------------

@@ -35,13 +35,7 @@ def _axes_shardings(axes_tree, rules, mesh):
 
 
 def event_batch_struct(batch_size: int, d_edge: int) -> EventBatch:
-    return EventBatch(
-        src=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
-        dst=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
-        t=jax.ShapeDtypeStruct((batch_size,), jnp.float32),
-        feat=jax.ShapeDtypeStruct((batch_size, d_edge), jnp.float32),
-        mask=jax.ShapeDtypeStruct((batch_size,), jnp.bool_),
-    )
+    return EventBatch.struct(batch_size, d_edge)
 
 
 def event_batch_sharding(mesh, rules) -> EventBatch:
@@ -65,6 +59,14 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
                          scatter boundaries (repro.train.annotate) so the
                          dense table scatters are provably local — removing
                          the table-sized all-reduces GSPMD otherwise emits.
+
+    With cfg.pipeline_depth >= 1 the spec carries the staleness-aware
+    pipelined step (repro.train.pipeline): the PipelineState snapshot is
+    sharded like the memory table, the big state buffers (opt, model state,
+    pipeline snapshot) are DONATED so XLA aliases them in place, and the
+    embed stage's reads hit the local snapshot shard — the live-table
+    scatter collectives overlap with the next step's embedding compute
+    instead of serialising before it (docs/PIPELINE.md §Distributed).
     """
     from repro.launch.specs import LoweredSpec
 
@@ -92,9 +94,29 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
     s_shard = _axes_shardings(state_axes, rules, mesh)
     b_shard = event_batch_sharding(mesh, rules)
 
+    pipelined = cfg.pipeline_depth >= 1
     train_step_fn = _make_raw_train_step(cfg, opt, mesh=mesh,
-                                         strategy=strategy, rules=rules)
+                                         strategy=strategy, rules=rules,
+                                         pipelined=pipelined)
     batch = event_batch_struct(batch_size, cfg.d_edge)
+
+    if pipelined:
+        from repro.train import pipeline as pipeline_lib
+        pstate_shapes = jax.eval_shape(
+            lambda: pipeline_lib.PipelineState.init(
+                mdgnn.init_state(cfg)["memory"]))
+        ps_shard = _axes_shardings(pipeline_lib.PIPELINE_STATE_AXES,
+                                   rules, mesh)
+        return LoweredSpec(
+            fn=train_step_fn,
+            args=(param_shapes, opt_shapes, state_shapes, pstate_shapes,
+                  batch, batch, batch),
+            in_shardings=(p_shard, o_shard, s_shard, ps_shard,
+                          b_shard, b_shard, b_shard),
+            out_shardings=(p_shard, o_shard, s_shard, ps_shard,
+                           NamedSharding(mesh, P())),
+            donate_argnums=(1, 2, 3),  # opt state, model state, snapshot
+        )
 
     return LoweredSpec(
         fn=train_step_fn,
@@ -105,8 +127,11 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
 
 
 def _make_raw_train_step(cfg: MDGNNConfig, opt, mesh=None,
-                         strategy: str = "gspmd", rules=None):
-    """Un-jitted train step (the dry-run jits it with explicit shardings)."""
+                         strategy: str = "gspmd", rules=None,
+                         pipelined: bool = False):
+    """Un-jitted train step (the dry-run jits it with explicit shardings).
+    With pipelined=True the step carries the extra PipelineState argument
+    and re-uses the staleness-aware body from repro.train.pipeline."""
     from repro.train import annotate
 
     replicated = (NamedSharding(mesh, P()) if mesh is not None else None)
@@ -117,27 +142,38 @@ def _make_raw_train_step(cfg: MDGNNConfig, opt, mesh=None,
             ("event",) + (None,) * (x.ndim - 1), rules, mesh.axis_names)
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
-    def train_step(params, opt_state, state, prev_batch, pos, neg):
-        # re-use the single-host step body without its jax.jit wrapper
-        step = loop_lib.make_train_step(cfg, opt)
-        fn = step.__wrapped__
-
-        def run():
-            return fn(params, opt_state, state, prev_batch, pos, neg)
-
+    def _hooks():
         hooks = {}
         if strategy == "compact_update":
             hooks["compact_fn"] = lambda x: jax.lax.with_sharding_constraint(
                 x, replicated)
         if strategy in ("compact_update", "optimized") and rules is not None:
             hooks["events_fn"] = _event_sharding
-        if hooks:
-            # hooks are active during TRACING of the step body, which is
-            # exactly when the annotate.* sites execute
-            with annotate.install(**hooks):
-                params2, opt_state2, state2, metrics = run()
-        else:
-            params2, opt_state2, state2, metrics = run()
-        return params2, opt_state2, state2, metrics["loss"]
+        return hooks
 
-    return train_step
+    def _run_hooked(fn, args):
+        """Trace the step body with the annotate hooks installed — tracing
+        is exactly when the annotate.* sites execute. Returns the step's
+        outputs with the metrics dict reduced to the loss scalar."""
+        hooks = _hooks()
+        if hooks:
+            with annotate.install(**hooks):
+                out = fn(*args)
+        else:
+            out = fn(*args)
+        return out[:-1] + (out[-1]["loss"],)
+
+    def train_step(params, opt_state, state, prev_batch, pos, neg):
+        # re-use the single-host step body without its jax.jit wrapper
+        fn = loop_lib.make_train_step(cfg, opt).__wrapped__
+        return _run_hooked(fn, (params, opt_state, state,
+                                prev_batch, pos, neg))
+
+    def pipelined_train_step(params, opt_state, state, pstate,
+                             prev_batch, pos, neg):
+        from repro.train import pipeline as pipeline_lib
+        fn = pipeline_lib.make_pipelined_train_step(cfg, opt).__wrapped__
+        return _run_hooked(fn, (params, opt_state, state, pstate,
+                                prev_batch, pos, neg))
+
+    return pipelined_train_step if pipelined else train_step

@@ -63,6 +63,60 @@ def _apply_pres(params, cfg, mem2, info, pres_state):
     return MemoryState(mem=table, last_update=mem2.last_update), fused, delta
 
 
+def endpoint_logits(params, cfg: MDGNNConfig, state2, pos: EventBatch,
+                    neg: EventBatch):
+    """Link-prediction logits for a positive + negative batch.
+
+    One batched embedding call for all four endpoint sets: one table
+    gather -> ONE cotangent partial per table in the backward pass,
+    instead of 4x2 table-sized combines (docs/EXPERIMENTS.md §Perf iter. 7).
+    Shared by the sequential step, the eval step, and the pipelined step
+    (repro.train.pipeline), which passes a staleness-filled memory view."""
+    h = mdgnn.embed_nodes(
+        params, cfg, state2,
+        jnp.concatenate([pos.src, pos.dst, neg.src, neg.dst]),
+        jnp.concatenate([pos.t, pos.t, neg.t, neg.t]))
+    b = pos.src.shape[0]
+    h_src_p, h_dst_p, h_src_n, h_dst_n = (
+        h[:b], h[b:2 * b], h[2 * b:3 * b], h[3 * b:])
+    logit_p = mdgnn.link_logits(params, h_src_p, h_dst_p)
+    logit_n = mdgnn.link_logits(params, h_src_n, h_dst_n)
+    return logit_p, logit_n
+
+
+def link_bce(logit_p, logit_n, pos_mask, neg_mask):
+    """Masked mean binary cross-entropy over positive/negative logits."""
+    bce_p = jnp.sum(jax.nn.softplus(-logit_p) * pos_mask)
+    bce_n = jnp.sum(jax.nn.softplus(logit_n) * neg_mask)
+    denom = jnp.maximum(jnp.sum(pos_mask) + jnp.sum(neg_mask), 1.0)
+    return (bce_p + bce_n) / denom
+
+
+def maintain_state(cfg: MDGNNConfig, params, state2, aux,
+                   prev_batch: EventBatch):
+    """Non-differentiable post-step state maintenance: PRES tracker update,
+    neighbour ring buffers, APAN mailbox. Shared by the sequential and the
+    pipelined train steps."""
+    state2 = jax.lax.stop_gradient(state2)
+    if cfg.use_pres:
+        track_ids = (aux["info_nodes"] % cfg.pres_buckets
+                     if cfg.pres_buckets else aux["info_nodes"])
+        new_pres = pres.update_trackers(
+            state2["pres"], track_ids, aux["delta"],
+            jnp.zeros_like(aux["info_nodes"]),
+            aux["info_selected"] & aux["info_mask"])
+        state2 = dict(state2, pres=new_pres)
+    state2 = dict(state2, neighbors=jax.lax.stop_gradient(
+        batching.update_neighbors(state2["neighbors"], prev_batch)))
+    if cfg.variant == "apan":
+        nodes, times, msgs, mask = mdgnn.compute_messages(
+            params, cfg, state2["memory"], prev_batch)
+        state2 = dict(state2, mailbox=mdgnn.update_mailbox(
+            cfg, state2["mailbox"], nodes,
+            jax.lax.stop_gradient(msgs), times, mask))
+    return state2
+
+
 def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
     """Returns a jitted train_step closure.
 
@@ -86,22 +140,8 @@ def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
                                              state["pres"])
         state2 = dict(state, memory=mem2)
         # ------------------------------------------------ link prediction --
-        # one batched embedding call for all four endpoint sets: one table
-        # gather -> ONE cotangent partial per table in the backward pass,
-        # instead of 4x2 table-sized combines (docs/EXPERIMENTS.md §Perf iter. 7)
-        h = mdgnn.embed_nodes(
-            params, cfg, state2,
-            jnp.concatenate([pos.src, pos.dst, neg.src, neg.dst]),
-            jnp.concatenate([pos.t, pos.t, neg.t, neg.t]))
-        b = pos.src.shape[0]
-        h_src_p, h_dst_p, h_src_n, h_dst_n = (
-            h[:b], h[b:2 * b], h[2 * b:3 * b], h[3 * b:])
-        logit_p = mdgnn.link_logits(params, h_src_p, h_dst_p)
-        logit_n = mdgnn.link_logits(params, h_src_n, h_dst_n)
-        bce_p = jnp.sum(jax.nn.softplus(-logit_p) * pos.mask)
-        bce_n = jnp.sum(jax.nn.softplus(logit_n) * neg.mask)
-        denom = jnp.maximum(jnp.sum(pos.mask) + jnp.sum(neg.mask), 1.0)
-        loss = (bce_p + bce_n) / denom
+        logit_p, logit_n = endpoint_logits(params, cfg, state2, pos, neg)
+        loss = link_bce(logit_p, logit_n, pos.mask, neg.mask)
         # ------------------------------------------- coherence smoothing ---
         pen = coherence.coherence_penalty(info["s_prev"], fused,
                                           mask=info["selected"] & info["mask"])
@@ -124,23 +164,7 @@ def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
         updates, opt_state = opt.update(grads, opt_state, params)
         params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
         # ------------------------- non-differentiable state maintenance ----
-        state2 = jax.lax.stop_gradient(state2)
-        if cfg.use_pres:
-            track_ids = (aux["info_nodes"] % cfg.pres_buckets
-                         if cfg.pres_buckets else aux["info_nodes"])
-            new_pres = pres.update_trackers(
-                state2["pres"], track_ids, aux["delta"],
-                jnp.zeros_like(aux["info_nodes"]),
-                aux["info_selected"] & aux["info_mask"])
-            state2 = dict(state2, pres=new_pres)
-        state2 = dict(state2, neighbors=jax.lax.stop_gradient(
-            batching.update_neighbors(state2["neighbors"], prev_batch)))
-        if cfg.variant == "apan":
-            nodes, times, msgs, mask = mdgnn.compute_messages(
-                params, cfg, state2["memory"], prev_batch)
-            state2 = dict(state2, mailbox=mdgnn.update_mailbox(
-                cfg, state2["mailbox"], nodes,
-                jax.lax.stop_gradient(msgs), times, mask))
+        state2 = maintain_state(cfg, params, state2, aux, prev_batch)
         metrics = {"loss": loss, "coherence_penalty": aux["coherence_penalty"],
                    "logit_p": aux["logit_p"], "logit_n": aux["logit_n"]}
         return params, opt_state, state2, metrics
@@ -163,15 +187,7 @@ def make_eval_step(cfg: MDGNNConfig):
                 params, cfg, state2["memory"], prev_batch)
             state2 = dict(state2, mailbox=mdgnn.update_mailbox(
                 cfg, state2["mailbox"], nodes, msgs, times, mask))
-        h = mdgnn.embed_nodes(
-            params, cfg, state2,
-            jnp.concatenate([pos.src, pos.dst, neg.src, neg.dst]),
-            jnp.concatenate([pos.t, pos.t, neg.t, neg.t]))
-        b = pos.src.shape[0]
-        h_src_p, h_dst_p, h_src_n, h_dst_n = (
-            h[:b], h[b:2 * b], h[2 * b:3 * b], h[3 * b:])
-        logit_p = mdgnn.link_logits(params, h_src_p, h_dst_p)
-        logit_n = mdgnn.link_logits(params, h_src_n, h_dst_n)
+        logit_p, logit_n = endpoint_logits(params, cfg, state2, pos, neg)
         return state2, logit_p, logit_n
 
     return jax.jit(eval_step)

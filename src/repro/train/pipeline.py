@@ -1,0 +1,260 @@
+"""Staleness-aware pipelined training schedule (docs/PIPELINE.md).
+
+The sequential loop (repro.train.loop, Alg. 1/2) serialises
+sample -> memory update -> embed -> loss per temporal batch, leaving the
+accelerator idle during host-side batch prep and forcing every embedding
+to wait on the immediately preceding memory write. Following the
+MSPipe/DistTGL observation that the memory module tolerates *bounded*
+staleness, this module decouples the two stages:
+
+* the MEMORY stage keeps the live table exactly as in the sequential loop
+  (every batch's writes land immediately, PRES fusion included);
+* the EMBEDDING stage reads a double-buffered *snapshot* of the table that
+  is refreshed every `cfg.pipeline_depth` steps — so a row it reads is at
+  most `pipeline_depth` batch-writes stale;
+* the rows whose writes are still "in flight" (folded into the live table
+  but not yet in the snapshot) are filled with the PRES Eq. 7 prediction:
+  the GMM trackers extrapolate the snapshot row over the staleness gap,
+  exactly the mechanism the paper uses to bridge intra-batch temporal
+  discontinuity. The memory-coherence term (Eq. 10) bounds the induced
+  error the same way Sec. 4 bounds the discontinuity error.
+
+Host-side, `EventStream.prefetch_batches` prepares batch i+1..i+K on a
+background thread while batch i's fused memory-update/embed step runs, and
+the epoch driver never syncs on per-step metrics (device scalars are
+fetched once per epoch).
+
+`pipeline_depth=0` is the strictly sequential schedule: `make_train_step`
+and `run_epoch` delegate verbatim to `repro.train.loop`, so depth 0 is
+bit-exact with the historical loop (pinned in tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coherence, pres
+from repro.graph.events import EventBatch
+from repro.graph.negatives import sample_negatives
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig, MemoryState
+from repro.train import loop as loop_lib
+from repro.utils import metrics as metrics_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PipelineState:
+    """Double-buffered read view of the memory table.
+
+    `read_mem`/`read_last_update` are the snapshot the embedding stage
+    reads; `pending` counts, per node, the event occurrences folded into
+    the live table since the snapshot (the Eq. 7 "count" extrapolation
+    scale for the staleness fill); `tick` counts steps since the last
+    refresh (the snapshot is refreshed when tick + 1 >= pipeline_depth,
+    bounding staleness by pipeline_depth batch-writes)."""
+    read_mem: jnp.ndarray          # (N, D) — snapshot table
+    read_last_update: jnp.ndarray  # (N,)   — snapshot last-update times
+    pending: jnp.ndarray           # (N,)   — occurrences not yet visible
+    tick: jnp.ndarray              # ()     — steps since last refresh
+
+    @staticmethod
+    def init(mem: MemoryState) -> "PipelineState":
+        return PipelineState(
+            read_mem=mem.mem,
+            read_last_update=mem.last_update,
+            pending=jnp.zeros(mem.mem.shape[:1], jnp.float32),
+            tick=jnp.zeros((), jnp.int32),
+        )
+
+
+PIPELINE_STATE_AXES = PipelineState(
+    read_mem=("nodes", "embed"), read_last_update=("nodes",),
+    pending=("nodes",), tick=())
+
+
+def stale_read_table(cfg: MDGNNConfig, pres_state, pstate: PipelineState,
+                     live_last_update) -> jnp.ndarray:
+    """The table the embedding stage reads: snapshot rows extrapolated over
+    the staleness gap with PRES `predict` (Eq. 7).
+
+    The extrapolation scale matches cfg.pres_scale: "count" uses the
+    pending-occurrence count per node, "time" the gap between the live and
+    snapshot last-update times. Nodes with no in-flight write have scale 0,
+    so their rows pass through untouched; without PRES the trackers are
+    empty (zero deltas) and this degrades to a raw stale read."""
+    n = pstate.read_mem.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    pres_ids = ids % cfg.pres_buckets if cfg.pres_buckets else ids
+    if cfg.pres_scale == "count":
+        scale = pstate.pending
+    else:  # "time"
+        scale = jnp.maximum(live_last_update - pstate.read_last_update, 0.0)
+    filled = pres.predict(pres_state, pstate.read_mem.astype(jnp.float32),
+                          scale, pres_ids, clip=cfg.pres_clip)
+    return filled.astype(pstate.read_mem.dtype)
+
+
+def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
+    """Jitted staleness-aware train step (requires cfg.pipeline_depth >= 1).
+
+    Signature: (params, opt_state, state, pstate, prev_batch, pos, neg)
+            -> (params, opt_state, state, pstate, metrics).
+
+    Identical to loop.make_train_step except the embedding stage reads the
+    PRES-filled snapshot (`stale_read_table`) instead of the just-written
+    live table — the live write and the embed are thereby independent, so
+    on a multi-stage deployment they overlap (docs/PIPELINE.md §Schedule).
+    Gradient note: the BCE term reaches the message/GRU parameters only
+    through the coherence/PRES path (the snapshot is constant w.r.t. this
+    step's parameters) — the standard bounded-staleness trade."""
+    if cfg.pipeline_depth < 1:
+        raise ValueError("make_pipelined_train_step needs pipeline_depth >= 1"
+                         " — depth 0 is loop.make_train_step")
+    use_smooth = (cfg.use_smoothing if cfg.use_smoothing is not None
+                  else cfg.use_pres)
+    if not (use_smooth and cfg.beta):
+        # The BCE reads only the constant snapshot, so the coherence term is
+        # the ONLY path from the loss to the memory-module params (PRES
+        # trackers are state, not params) — without it they would silently
+        # stay frozen at init for the whole run.
+        raise ValueError(
+            "pipeline_depth >= 1 without the coherence-smoothing term would "
+            "freeze the memory/message parameters (the embedding reads a "
+            "snapshot that is constant w.r.t. them, so Eq. 10 is the only "
+            "gradient path); set use_smoothing=True with beta > 0 (the "
+            "default when use_pres=True), or train with pipeline_depth=0 "
+            "(docs/PIPELINE.md §Staleness semantics)")
+    if gru_fn is None and cfg.use_kernels and cfg.memory_cell == "gru":
+        from repro.kernels import ops as kops
+        gru_fn = kops.gru_cell_params
+
+    def loss_and_state(params, state, pstate: PipelineState,
+                       prev_batch: EventBatch, pos: EventBatch,
+                       neg: EventBatch):
+        # ------------------------------------------- MEMORY stage (live) --
+        mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
+                                         prev_batch, gru_fn=gru_fn,
+                                         defer_write=cfg.use_pres)
+        fused = info["s_meas"]
+        delta = jnp.zeros_like(fused)
+        if cfg.use_pres:
+            mem2, fused, delta = loop_lib._apply_pres(params, cfg, mem2, info,
+                                                      state["pres"])
+        state2 = dict(state, memory=mem2)
+        # ------------------------------- staleness accounting + read view --
+        occ = jax.ops.segment_sum(
+            info["mask"].astype(jnp.float32),
+            jnp.where(info["mask"], info["nodes"], cfg.n_nodes),
+            num_segments=cfg.n_nodes + 1)[:-1]
+        pstate = dataclasses.replace(pstate, pending=pstate.pending + occ)
+        read_tab = stale_read_table(cfg, state["pres"], pstate,
+                                    mem2.last_update)
+        embed_state = dict(state2, memory=MemoryState(
+            mem=read_tab, last_update=pstate.read_last_update))
+        # --------------------------------------- EMBEDDING stage (stale) --
+        logit_p, logit_n = loop_lib.endpoint_logits(params, cfg, embed_state,
+                                                    pos, neg)
+        loss = loop_lib.link_bce(logit_p, logit_n, pos.mask, neg.mask)
+        pen = coherence.coherence_penalty(info["s_prev"], fused,
+                                          mask=info["selected"] & info["mask"])
+        # use_smooth/beta validated at builder scope: the coherence term is
+        # the pipelined step's only gradient path to the memory params
+        loss = loss + cfg.beta * pen
+        # ------------------------------------------- snapshot refresh lag --
+        refresh = (pstate.tick + 1) >= cfg.pipeline_depth
+        pstate2 = PipelineState(
+            read_mem=jnp.where(refresh, mem2.mem, pstate.read_mem),
+            read_last_update=jnp.where(refresh, mem2.last_update,
+                                       pstate.read_last_update),
+            pending=jnp.where(refresh, 0.0, pstate.pending),
+            tick=jnp.where(refresh, 0, pstate.tick + 1).astype(jnp.int32),
+        )
+        aux = {
+            "logit_p": logit_p, "logit_n": logit_n,
+            "coherence_penalty": pen,
+            "delta": jax.lax.stop_gradient(delta),
+            "info_nodes": info["nodes"], "info_selected": info["selected"],
+            "info_mask": info["mask"],
+        }
+        return loss, (state2, pstate2, aux)
+
+    def train_step(params, opt_state, state, pstate, prev_batch, pos, neg):
+        (loss, (state2, pstate2, aux)), grads = jax.value_and_grad(
+            loss_and_state, has_aux=True)(params, state, pstate,
+                                          prev_batch, pos, neg)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        state2 = loop_lib.maintain_state(cfg, params, state2, aux, prev_batch)
+        pstate2 = jax.lax.stop_gradient(pstate2)
+        metrics = {"loss": loss, "coherence_penalty": aux["coherence_penalty"],
+                   "logit_p": aux["logit_p"], "logit_n": aux["logit_n"],
+                   # batch-writes missing from the snapshot THIS step's embed
+                   # read (incl. the current in-flight write): in [1, K]
+                   "staleness": pstate.tick + 1}
+        return params, opt_state, state2, pstate2, metrics
+
+    return jax.jit(train_step)
+
+
+def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
+    """Facade: the sequential step at depth 0, the pipelined step otherwise."""
+    if cfg.pipeline_depth == 0:
+        return loop_lib.make_train_step(cfg, opt, gru_fn=gru_fn)
+    return make_pipelined_train_step(cfg, opt, gru_fn=gru_fn)
+
+
+def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
+              train_step, key, dst_range, collect_logits=False):
+    """Facade over loop.run_epoch: depth 0 delegates verbatim (bit-exact);
+    depth >= 1 runs the pipelined schedule.
+
+    `batches` may be a list OR a lazy/prefetching iterator
+    (`EventStream.prefetch_batches`) — the pipelined driver consumes it
+    pairwise, so host batch prep overlaps device compute. The PRNG key is
+    split per step in the same order as loop.run_epoch, so negatives are
+    identical across depths (the sweep compares schedules, not samples).
+    Per-step metrics stay on device; the single host sync happens at epoch
+    end (the sequential loop syncs every step on float(loss))."""
+    if cfg.pipeline_depth == 0:
+        if not isinstance(batches, (list, tuple)):
+            batches = list(batches)
+        return loop_lib.run_epoch(params, opt_state, state, batches, cfg,
+                                  train_step, key, dst_range,
+                                  collect_logits=collect_logits)
+    t0 = time.perf_counter()
+    pstate = PipelineState.init(state["memory"])
+    losses, pos_all, neg_all = [], [], []
+    it = iter(batches)
+    try:
+        prev_batch = next(it)
+        for batch in it:
+            key, sub = jax.random.split(key)
+            neg = sample_negatives(sub, batch, *dst_range)
+            params, opt_state, state, pstate, m = train_step(
+                params, opt_state, state, pstate, prev_batch, batch, neg)
+            losses.append(m["loss"])
+            pos_all.append(m["logit_p"])
+            neg_all.append(m["logit_n"])
+            prev_batch = batch
+    finally:
+        # stop a PrefetchIterator's producer thread if the epoch aborts
+        close = getattr(it, "close", None)
+        if close is not None:
+            close()
+    # one host sync for the whole epoch
+    losses = [float(x) for x in losses]
+    pos_all = [np.asarray(x) for x in pos_all]
+    neg_all = [np.asarray(x) for x in neg_all]
+    ap = metrics_lib.average_precision(np.concatenate(pos_all),
+                                       np.concatenate(neg_all))
+    aps = [metrics_lib.average_precision(p, n)
+           for p, n in zip(pos_all, neg_all)] if collect_logits else []
+    dt = time.perf_counter() - t0
+    return params, opt_state, state, loop_lib.EpochResult(
+        ap, float(np.mean(losses)), dt, aps)

@@ -1,0 +1,230 @@
+"""Staleness-aware pipelined training (docs/PIPELINE.md): the prefetching
+EventStream iterator (ordering, tail padding, error propagation), depth-0
+bit-exactness with the sequential loop, bounded-staleness training at
+depth >= 1, and the pipelined distributed spec."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import datasets
+from repro.graph.events import EventBatch, PrefetchIterator, prefetch
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.train import loop, pipeline
+
+
+# ---------------------------------------------------------------------------
+# Prefetching iterator
+# ---------------------------------------------------------------------------
+
+
+def _assert_batches_equal(a, b):
+    for f in ("src", "dst", "t", "feat", "mask"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)))
+
+
+def test_iter_batches_matches_materialised_list(tiny_stream):
+    lazy = list(tiny_stream.iter_temporal_batches(77))
+    eager = tiny_stream.temporal_batches(77)
+    assert len(lazy) == len(eager) == tiny_stream.num_batches(77)
+    for x, y in zip(lazy, eager):
+        _assert_batches_equal(x, y)
+
+
+def test_prefetch_preserves_order_and_tail_padding(tiny_stream):
+    b = 77
+    out = list(tiny_stream.prefetch_batches(b, depth=3))
+    assert len(out) == tiny_stream.num_batches(b)
+    for x, y in zip(out, tiny_stream.temporal_batches(b)):
+        _assert_batches_equal(x, y)
+    # static shapes throughout; tail batch padded with masked-off zeros
+    for x in out:
+        assert x.size == b
+    tail = out[-1]
+    valid = len(tiny_stream) - (len(out) - 1) * b
+    assert int(jnp.sum(tail.mask)) == valid
+    assert np.all(np.asarray(tail.src)[valid:] == 0)
+    assert not np.any(np.asarray(tail.mask)[valid:])
+    # events across all batches reassemble the chronological stream
+    src = np.concatenate([np.asarray(x.src)[np.asarray(x.mask)] for x in out])
+    np.testing.assert_array_equal(src, tiny_stream.src)
+
+
+def test_prefetch_propagates_source_exception():
+    def gen():
+        yield 1
+        raise RuntimeError("boom")
+
+    it = prefetch(gen(), depth=2)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="boom"):
+        next(it)
+    with pytest.raises(StopIteration):   # terminated, must not hang
+        next(it)
+
+
+def test_prefetch_rejects_bad_depth():
+    with pytest.raises(ValueError):
+        PrefetchIterator([1, 2], depth=0)
+
+
+def test_batch_struct_cache_matches_concrete_batches(tiny_stream):
+    s1 = EventBatch.struct(64, tiny_stream.feat_dim)
+    assert s1 is EventBatch.struct(64, tiny_stream.feat_dim)   # cached
+    concrete = tiny_stream.temporal_batches(64)[0]
+    for f in ("src", "dst", "t", "feat", "mask"):
+        assert getattr(s1, f).shape == getattr(concrete, f).shape
+        assert getattr(s1, f).dtype == getattr(concrete, f).dtype
+
+
+# ---------------------------------------------------------------------------
+# Pipelined schedule
+# ---------------------------------------------------------------------------
+
+
+def _setup(stream, depth, use_pres=True):
+    cfg = MDGNNConfig(variant="tgn", n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=8, d_msg=8, d_time=4,
+                      d_embed=8, n_neighbors=4, use_pres=use_pres,
+                      pipeline_depth=depth)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    return cfg, params, opt.init(params), state, opt
+
+
+def test_depth0_bit_exact_with_sequential_loop(tiny_stream):
+    """pipeline_depth=0 must be bit-exact with the historical loop: same
+    per-epoch loss/AP and bitwise-identical parameters."""
+    batches = tiny_stream.temporal_batches(100)
+    dst_range = (50, 80)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, depth=0)
+    ref_step = loop.make_train_step(cfg, opt)
+    p_ref, _, _, res_ref = loop.run_epoch(
+        params, opt_state, state, batches, cfg, ref_step,
+        jax.random.PRNGKey(1), dst_range)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, depth=0)
+    pipe_step = pipeline.make_train_step(cfg, opt)
+    p_pipe, _, _, res_pipe = pipeline.run_epoch(
+        params, opt_state, state, iter(batches), cfg, pipe_step,
+        jax.random.PRNGKey(1), dst_range)
+
+    assert res_pipe.loss == res_ref.loss
+    assert res_pipe.ap == res_ref.ap
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_pipe)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_pipelined_depth_trains(tiny_stream, depth):
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, depth=depth)
+    step = pipeline.make_train_step(cfg, opt)
+    params, opt_state, state, res = pipeline.run_epoch(
+        params, opt_state, state, tiny_stream.prefetch_batches(100, depth=2),
+        cfg, step, jax.random.PRNGKey(1), (50, 80))
+    assert np.isfinite(res.loss)
+    assert 0.0 <= res.ap <= 1.0
+
+
+def test_snapshot_refresh_bounds_staleness(tiny_stream):
+    """Run the pipelined step manually and check the PipelineState contract:
+    tick never reaches pipeline_depth (refresh resets it) and pending is
+    cleared at each refresh."""
+    depth = 2
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, depth=depth)
+    step = pipeline.make_pipelined_train_step(cfg, opt)
+    batches = tiny_stream.temporal_batches(100)
+    pstate = pipeline.PipelineState.init(state["memory"])
+    key = jax.random.PRNGKey(1)
+    from repro.graph.negatives import sample_negatives
+    ticks = []
+    for i in range(1, len(batches)):
+        key, sub = jax.random.split(key)
+        neg = sample_negatives(sub, batches[i], *(50, 80))
+        params, opt_state, state, pstate, m = step(
+            params, opt_state, state, pstate, batches[i - 1], batches[i], neg)
+        ticks.append(int(pstate.tick))
+        if int(pstate.tick) == 0:           # just refreshed
+            assert float(jnp.sum(pstate.pending)) == 0.0
+            np.testing.assert_array_equal(np.asarray(pstate.read_mem),
+                                          np.asarray(state["memory"].mem))
+        else:                               # writes in flight
+            assert float(jnp.sum(pstate.pending)) > 0.0
+    assert max(ticks) < depth
+    assert 0 in ticks                       # refresh actually happens
+
+
+def test_stale_read_table_without_pres_is_raw_snapshot(tiny_stream):
+    """Empty GMM trackers predict zero deltas: the staleness fill must
+    degrade to the raw snapshot."""
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, depth=1,
+                                                use_pres=False)
+    pstate = pipeline.PipelineState.init(state["memory"])
+    pstate = pipeline.PipelineState(
+        read_mem=pstate.read_mem, read_last_update=pstate.read_last_update,
+        pending=jnp.ones_like(pstate.pending) * 3.0, tick=pstate.tick)
+    tab = pipeline.stale_read_table(cfg, state["pres"], pstate,
+                                    state["memory"].last_update)
+    np.testing.assert_array_equal(np.asarray(tab),
+                                  np.asarray(pstate.read_mem))
+
+
+def test_pipelined_step_refuses_gradient_free_memory_config(tiny_stream):
+    """Without the coherence term the pipelined loss has no path to the
+    memory params (the snapshot is constant, PRES trackers are state, not
+    params) — the builder must refuse, not silently freeze them."""
+    import dataclasses
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, depth=1,
+                                                use_pres=False)
+    with pytest.raises(ValueError, match="freeze"):
+        pipeline.make_pipelined_train_step(cfg, opt)
+    # PRES alone does NOT restore a gradient path (trackers are state)
+    cfg_pres = dataclasses.replace(cfg, use_pres=True, use_smoothing=False)
+    with pytest.raises(ValueError, match="freeze"):
+        pipeline.make_pipelined_train_step(cfg_pres, opt)
+    with pytest.raises(ValueError, match="freeze"):
+        pipeline.make_pipelined_train_step(
+            dataclasses.replace(cfg, use_smoothing=True, beta=0.0), opt)
+    # coherence smoothing with beta > 0 is the gradient path -> accepted
+    pipeline.make_pipelined_train_step(
+        dataclasses.replace(cfg, use_smoothing=True, beta=0.1), opt)
+
+
+def test_prefetch_close_stops_producer(tiny_stream):
+    """Abandoning a prefetch mid-stream then closing must stop the producer
+    thread (no spinning leak)."""
+    it = tiny_stream.prefetch_batches(50, depth=2)
+    next(it)
+    it.close()
+    it._thread.join(timeout=5.0)
+    assert not it._thread.is_alive()
+
+
+def test_pipelined_distributed_spec_compiles_debug_mesh():
+    from repro.launch import mesh as mesh_lib
+    from repro.train.distributed import make_mdgnn_train_spec
+
+    cfg = MDGNNConfig(variant="tgn", n_nodes=64, d_edge=8, d_mem=16,
+                      d_msg=16, d_time=8, d_embed=16, use_pres=True,
+                      pipeline_depth=2)
+    mesh = mesh_lib.make_debug_mesh(1, 1)
+    spec = make_mdgnn_train_spec(cfg, 32, mesh)
+    assert spec.donate_argnums == (1, 2, 3)     # opt, state, snapshot donated
+    assert len(spec.args) == 7                  # + PipelineState
+    with mesh:
+        compiled = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                           out_shardings=spec.out_shardings,
+                           donate_argnums=spec.donate_argnums
+                           ).lower(*spec.args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # list-of-dicts on this jaxlib
+        cost = cost[0]
+    assert float(cost.get("flops", 0)) > 0

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Relative-markdown-link checker (run by the CI docs job and locally).
+
+Scans every git-tracked *.md file (rglob fallback outside a repo) for
+[text](target) links and verifies that relative targets exist on disk
+(anchors are stripped; http(s)/mailto links are skipped — CI must not
+depend on the network).
+
+Usage:  python tools/check_links.py [root]
+Exits non-zero listing every broken link as file:line -> target.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "results", "__pycache__", ".pytest_cache"}
+
+
+def iter_md_files(root: pathlib.Path):
+    # tracked files only, so local scratch notes / virtualenv READMEs don't
+    # fail the advertised command in ways CI would never see
+    try:
+        # -co --exclude-standard: tracked + new-but-not-ignored files, so a
+        # doc added in the working tree is checked before it is committed
+        out = subprocess.run(["git", "ls-files", "-co", "--exclude-standard",
+                              "*.md"],
+                             cwd=root, capture_output=True, text=True,
+                             check=True)
+        for rel in sorted(set(out.stdout.split())):
+            p = root / rel
+            if p.exists():
+                yield p
+        return
+    except (OSError, subprocess.CalledProcessError):
+        pass  # not a git checkout — fall back to the filesystem walk
+    for p in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.relative_to(root).parts):
+            yield p
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md}:{lineno} -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1] if len(argv) > 1 else ".").resolve()
+    errors = []
+    n = 0
+    for md in iter_md_files(root):
+        n += 1
+        errors.extend(check_file(md))
+    if errors:
+        print(f"[check_links] {len(errors)} broken relative link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"[check_links] OK — {n} markdown files, no broken relative links")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
