@@ -1,0 +1,127 @@
+"""Kernel execution layer sweep (docs/KERNELS.md §Measured).
+
+Two level-of-detail views of the Pallas memory-maintenance path:
+
+* per-kernel micro rows for the memory-update chain (`gru_cell`,
+  `pres_filter`, `pres_predict`, fused `memory_update`) driven through the
+  registry — wall-time of the jitted pure-jnp oracle (the XLA baseline a
+  kernel replaces; on this CPU container interpret-mode kernel timings are
+  NOT meaningful, so the oracle is the timed path) plus the kernel's
+  max|err| parity delta, and the fused kernel's oracle fusion gain
+  (composed gru+filter oracle time / fused oracle time);
+* end-to-end events/sec for a short PRES training run with
+  `use_kernels` off vs on (interpret mode: measures that the kernel path
+  costs ~nothing numerically and plumbs end to end, not TPU perf).
+
+Emits results/bench/fig_kernels.json (registered as `fig_kernels` in
+benchmarks/run.py; figure index in docs/EXPERIMENTS.md §Benchmark index).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _max_err(got, want):
+    return max(float(jnp.abs(a - b).max())
+               for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)))
+
+
+def _memory_path_inputs(rng, m, d):
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32)
+    b = jnp.zeros((3 * d,), jnp.float32)
+    dm = jnp.asarray(rng.normal(size=(m, d)) * 0.01, jnp.float32)
+    scale = jnp.abs(jnp.asarray(rng.normal(size=(m,)), jnp.float32))
+    gamma = jnp.asarray(0.5, jnp.float32)
+    return x, h, w, u, b, dm, scale, gamma
+
+
+_COLS = ("kind", "kernel", "shape", "oracle_us", "kernel_max_err",
+         "composed_oracle_us", "fused_oracle_us", "oracle_fusion_gain",
+         "events_per_sec", "epoch_seconds", "compile_seconds", "ap_final",
+         "loss_final", "ap_delta", "loss_delta")
+
+
+def _row(**kw):
+    """Homogeneous row for common.emit (CSV needs one column set)."""
+    return {c: kw.get(c, "") for c in _COLS}
+
+
+def run(fast: bool = False, seeds: int = 1):
+    rng = np.random.default_rng(0)
+    rows = []
+    m, d = (2048, 128) if fast else (8192, 128)
+    x, h, w, u, b, dm, scale, gamma = _memory_path_inputs(rng, m, d)
+
+    cases = {
+        "gru_cell": ((x, h, w, u, b), {}),
+        "pres_filter": ((h, x, dm, scale, gamma), {}),
+        "pres_predict": ((h, dm, scale), {}),
+        "memory_update": ((x, h, w, u, b, dm, scale, gamma), {}),
+    }
+    oracle_us = {}
+    for name, (args, kw) in cases.items():
+        spec = ops.get_kernel(name)
+        oracle = jax.jit(spec.ref)
+        us = _time(oracle, *args)
+        err = _max_err(ops.dispatch(name, *args, interpret=True, **kw),
+                       oracle(*args))
+        oracle_us[name] = us
+        rows.append(_row(kind="kernel", kernel=name, shape=f"({m},{d})",
+                         oracle_us=us, kernel_max_err=err))
+    # fusion gain of the one-pass memory_update oracle over its composed
+    # parts (the HBM-round-trip count the fused kernel eliminates on TPU)
+    composed = oracle_us["gru_cell"] + oracle_us["pres_filter"]
+    rows.append(_row(kind="fusion", kernel="memory_update", shape=f"({m},{d})",
+                     composed_oracle_us=composed,
+                     fused_oracle_us=oracle_us["memory_update"],
+                     oracle_fusion_gain=composed / oracle_us["memory_update"]))
+
+    # ---------------- end-to-end: one PRES training run, kernels off/on ----
+    n_events = 2000 if fast else 4000
+    epochs = 2
+    stream, spec = common.bench_stream(n_events=n_events)
+    e2e = {}
+    for use_kernels in (False, True):
+        res = common.train_run(stream, spec, variant="tgn", use_pres=True,
+                               batch_size=200, epochs=epochs, d_mem=32,
+                               use_kernels=use_kernels)
+        steady = res.epoch_seconds[1:] or res.epoch_seconds
+        sec, _ = common.mean_std(steady)
+        e2e[use_kernels] = res
+        rows.append(_row(kind="e2e", kernel="all" if use_kernels else "none",
+                         shape=f"{n_events}ev",
+                         events_per_sec=n_events / sec, epoch_seconds=sec,
+                         compile_seconds=res.compile_seconds,
+                         ap_final=res.aps[-1], loss_final=res.losses[-1]))
+    # interpret-mode contract: the kernel path is the same computation
+    rows.append(_row(kind="e2e_parity", kernel="all", shape=f"{n_events}ev",
+                     ap_delta=abs(e2e[True].aps[-1] - e2e[False].aps[-1]),
+                     loss_delta=abs(e2e[True].losses[-1]
+                                    - e2e[False].losses[-1])))
+    common.emit("fig_kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,8 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
   fig_embed_depth  (engine)    events/sec: embed layers x batch x kernels
   fig_pipeline     (engine)    events/sec + AP: pipeline_depth 0/1/2/4 vs
                                the sequential baseline (docs/PIPELINE.md)
+  fig_kernels      (kernels)   memory-update path per-kernel timings +
+                               end-to-end use_kernels on/off (docs/KERNELS.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   roofline         §Roofline   dry-run roofline table consolidation
 
@@ -37,6 +39,7 @@ BENCHES = [
     "buckets_ablation",
     "fig_embed_depth",
     "fig_pipeline",
+    "fig_kernels",
     "kernels_micro",
     "roofline",
 ]

@@ -65,6 +65,16 @@ def pres_param_init(b: ParamBuilder, name: str = "pres"):
     sub.add("gamma_logit", (), (), init="zeros")  # sigmoid(0)=0.5
 
 
+def mixture_mean(state: PresState, nodes):
+    """Gathered GMM mixture-mean delta rows: E[delta | node] = sum_k a_k mu_k.
+
+    This is the gather the Pallas memory-maintenance kernels take as a dense
+    (M, D) input — gathers stay in XLA, the fused elementwise/matmul work
+    happens in the kernel (docs/KERNELS.md §Boundary)."""
+    alpha, mu, _ = state.gmm()
+    return jnp.sum(alpha[nodes][..., None] * mu[nodes], axis=1)
+
+
 def predict(state: PresState, s_prev, dt, nodes, *, key=None, clip: float = 5.0):
     """Eq. 7: s_hat(t2) = s(t1) + (t2-t1) * delta_s with delta_s from the GMM.
 
@@ -75,12 +85,12 @@ def predict(state: PresState, s_prev, dt, nodes, *, key=None, clip: float = 5.0)
     deltas (rates), and the extrapolated contribution dt * delta is clipped
     elementwise to +-clip — inter-event gaps are heavy-tailed, and an
     unclipped linear extrapolation over a long gap diverges."""
-    alpha, mu, var = state.gmm()
-    a = alpha[nodes]            # (M, w)
-    m = mu[nodes]               # (M, w, D)
     if key is None:
-        delta = jnp.sum(a[..., None] * m, axis=1)  # mixture mean
+        delta = mixture_mean(state, nodes)
     else:
+        alpha, mu, var = state.gmm()
+        a = alpha[nodes]            # (M, w)
+        m = mu[nodes]               # (M, w, D)
         comp = jax.random.categorical(key, jnp.log(a + 1e-9), axis=-1)  # (M,)
         mc = jnp.take_along_axis(m, comp[:, None, None], axis=1)[:, 0]
         vc = jnp.take_along_axis(var[nodes], comp[:, None, None], axis=1)[:, 0]

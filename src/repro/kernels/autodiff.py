@@ -1,0 +1,48 @@
+"""Shared custom-VJP factory: Pallas forward, oracle backward.
+
+`pallas_call` has no autodiff rule, so every registered kernel pairs its
+Pallas forward with the XLA-generated gradient of its pure-jnp oracle —
+the standard production pattern (docs/KERNELS.md §Autodiff). Each kernel
+module lru-caches one wrapper per static configuration:
+
+    oracle_vjp(partial(_my_pallas, **static), partial(my_ref, **static))
+"""
+from __future__ import annotations
+
+import jax
+
+
+def oracle_vjp(forward, ref_fn, nondiff=()):
+    """Wrap `forward` (the Pallas call, statics already bound) in a
+    custom_vjp whose backward pass is jax.vjp of `ref_fn` (the oracle,
+    same signature and statics).
+
+    nondiff: positional indices that get no cotangent (e.g. boolean masks);
+    those inputs are closed over when differentiating the oracle."""
+
+    @jax.custom_vjp
+    def f(*args):
+        return forward(*args)
+
+    def fwd(*args):
+        return f(*args), args
+
+    def bwd(res, g):
+        if not nondiff:
+            _, vjp = jax.vjp(ref_fn, *res)
+            return vjp(g)
+        diff_idx = [i for i in range(len(res)) if i not in nondiff]
+
+        def closed(*diff_args):
+            full = list(res)
+            for i, a in zip(diff_idx, diff_args):
+                full[i] = a
+            return ref_fn(*full)
+
+        _, vjp = jax.vjp(closed, *[res[i] for i in diff_idx])
+        grads = iter(vjp(g))
+        return tuple(None if i in nondiff else next(grads)
+                     for i in range(len(res)))
+
+    f.defvjp(fwd, bwd)
+    return f

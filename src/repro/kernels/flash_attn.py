@@ -137,22 +137,13 @@ def flash_attn_ref(q, k, v, *, causal: bool = True, window: int | None = None):
 
 @functools.lru_cache(maxsize=None)
 def _diff_flash(causal, window, q_block, kv_block, interpret):
-    @jax.custom_vjp
-    def f(q, k, v):
-        return _flash_attn_pallas(q, k, v, causal=causal, window=window,
-                                  q_block=q_block, kv_block=kv_block,
-                                  interpret=interpret)
-
-    def fwd(q, k, v):
-        return f(q, k, v), (q, k, v)
-
-    def bwd(res, g):
-        _, vjp = jax.vjp(lambda *a: flash_attn_ref(
-            *a, causal=causal, window=window), *res)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
-    return f
+    """Pallas forward, oracle backward (kernels/autodiff.py::oracle_vjp)."""
+    from repro.kernels import autodiff
+    return autodiff.oracle_vjp(
+        functools.partial(_flash_attn_pallas, causal=causal, window=window,
+                          q_block=q_block, kv_block=kv_block,
+                          interpret=interpret),
+        functools.partial(flash_attn_ref, causal=causal, window=window))
 
 
 def flash_attn(q, k, v, *, causal: bool = True, window: int | None = None,

@@ -58,32 +58,14 @@ def _gru_cell_pallas(x, h, w, u, b, *, block_m: int = 128,
     return out[:m]
 
 
-# ---------------------------------------------------------------------------
-# Differentiable wrapper: pallas_call has no VJP rule, so the training path
-# uses a custom_vjp — Pallas kernel on the forward, the pure-jnp oracle's
-# XLA-generated gradient on the backward (the standard production pattern;
-# a fused backward kernel is a further optimization).
-# ---------------------------------------------------------------------------
-
-
 @functools.lru_cache(maxsize=None)
 def _diff_gru(block_m: int, interpret: bool):
-    from repro.kernels import ref
-
-    @jax.custom_vjp
-    def f(x, h, w, u, b):
-        return _gru_cell_pallas(x, h, w, u, b, block_m=block_m,
-                                interpret=interpret)
-
-    def fwd(x, h, w, u, b):
-        return f(x, h, w, u, b), (x, h, w, u, b)
-
-    def bwd(res, g):
-        _, vjp = jax.vjp(ref.gru_cell_ref, *res)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
-    return f
+    """Pallas forward, oracle backward (kernels/autodiff.py::oracle_vjp)."""
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_gru_cell_pallas, block_m=block_m,
+                          interpret=interpret),
+        ref.gru_cell_ref)
 
 
 def gru_cell(x, h, w, u, b, *, block_m: int = 128, interpret: bool = True):

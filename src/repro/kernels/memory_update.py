@@ -1,0 +1,184 @@
+"""Fused memory-maintenance Pallas kernels (the full per-batch update path).
+
+`memory_update` fuses the three stages the sequential loop runs per temporal
+batch over the touched memory rows — GRU gates (measurement), PRES Eq. 7
+predict + Eq. 8 correct, and the Eq. 9 delta-rate statistic — into ONE pass:
+a row tile is read from HBM once, both GRU matmuls hit the MXU while the
+gates, the extrapolation and the fusion stay resident in VMEM, and the tile
+is written back once as (s_meas, fused, delta). Unfused this is ~10 HBM
+round trips per row (6 for the GRU, 4 for the filter); fused it is one read
++ one write — the TGL/MSPipe observation that batched-MDGNN throughput is
+won in exactly this scatter/update primitive.
+
+`pres_predict` is the standalone Eq. 7 extrapolation used by the pipelined
+schedule's staleness fill (`train/pipeline.py::stale_read_table`): one
+elementwise pass over the whole table instead of three.
+
+The GMM mixture-mean gather stays OUTSIDE both kernels (gathers are XLA's
+job — `core/pres.py::mixture_mean`); the kernels take the gathered rows.
+Shapes/tiling, interpret-mode policy and the registry dispatch are
+documented in docs/KERNELS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _memory_update_kernel(x_ref, h_ref, w_ref, u_ref, b_ref, dmean_ref,
+                          scale_ref, gamma_ref, meas_ref, fused_ref,
+                          delta_ref, *, clip, delta_mode):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    # ---- GRU gates: both matmuls back-to-back on the MXU ------------------
+    gx = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+    gh = jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
+    d = h.shape[-1]
+    rx, zx, nx = gx[:, :d], gx[:, d:2 * d], gx[:, 2 * d:]
+    rh, zh, nh = gh[:, :d], gh[:, d:2 * d], gh[:, 2 * d:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    s_meas = (1.0 - z) * h + z * n
+    # ---- PRES predict (Eq. 7) -> correct (Eq. 8) -> delta rate (Eq. 9) ----
+    dmean = dmean_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)[:, None]
+    gamma = gamma_ref[0]
+    s_pred = h + jnp.clip(scale * dmean, -clip, clip)
+    fused = (1.0 - gamma) * s_pred + gamma * s_meas
+    base = s_pred if delta_mode == "innovation" else h
+    delta = (fused - base) / jnp.maximum(scale, 1.0)
+    meas_ref[...] = s_meas.astype(meas_ref.dtype)
+    fused_ref[...] = fused.astype(fused_ref.dtype)
+    delta_ref[...] = delta.astype(delta_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "clip", "delta_mode",
+                                             "interpret"))
+def _memory_update_pallas(x, h, w, u, b, delta_mean, scale, gamma, *,
+                          block_m: int = 128, clip: float = 5.0,
+                          delta_mode: str = "innovation",
+                          interpret: bool = True):
+    """x: (M, Din) messages, h: (M, D) previous rows, w: (Din, 3D),
+    u: (D, 3D), b: (3D,), delta_mean: (M, D) gathered GMM mixture means,
+    scale: (M,) Eq. 7 extrapolation scale, gamma: scalar Eq. 8 gate.
+    Returns (s_meas, fused, delta), each (M, D) fp32."""
+    m, din = x.shape
+    d = h.shape[-1]
+    pad_m = (-m) % block_m
+    if pad_m:
+        pad2 = lambda a: jnp.pad(a, ((0, pad_m), (0, 0)))
+        x, h, delta_mean = map(pad2, (x, h, delta_mean))
+        scale = jnp.pad(scale, (0, pad_m))
+    mm = x.shape[0]
+    gamma_arr = jnp.reshape(gamma.astype(jnp.float32), (1,))
+    row = lambda i: (i, 0)
+    whole = lambda i: (0, 0)
+    meas, fused, delta = pl.pallas_call(
+        functools.partial(_memory_update_kernel, clip=clip,
+                          delta_mode=delta_mode),
+        grid=(mm // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, din), row),
+            pl.BlockSpec((block_m, d), row),
+            pl.BlockSpec((din, 3 * d), whole),
+            pl.BlockSpec((d, 3 * d), whole),
+            pl.BlockSpec((3 * d,), lambda i: (0,)),
+            pl.BlockSpec((block_m, d), row),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, d), row),
+            pl.BlockSpec((block_m, d), row),
+            pl.BlockSpec((block_m, d), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, d), jnp.float32),
+            jax.ShapeDtypeStruct((mm, d), jnp.float32),
+            jax.ShapeDtypeStruct((mm, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, h, w, u, b, delta_mean, scale, gamma_arr)
+    return meas[:m], fused[:m], delta[:m]
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_memory_update(block_m: int, clip: float, delta_mode: str,
+                        interpret: bool):
+    """Pallas forward, oracle backward (kernels/autodiff.py::oracle_vjp).
+    Gradients flow to the GRU weights, the messages/rows and gamma;
+    delta_mean/scale come from PRES tracker STATE, so their cotangents are
+    computed but discarded by the step's value_and_grad over params."""
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_memory_update_pallas, block_m=block_m, clip=clip,
+                          delta_mode=delta_mode, interpret=interpret),
+        functools.partial(ref.memory_update_ref, clip=clip,
+                          delta_mode=delta_mode))
+
+
+def memory_update(x, h, w, u, b, delta_mean, scale, gamma, *,
+                  block_m: int = 128, clip: float = 5.0,
+                  delta_mode: str = "innovation", interpret: bool = True):
+    """Differentiable fused memory-maintenance step (GRU + PRES filter +
+    delta-rate) — see module docstring and docs/KERNELS.md."""
+    return _diff_memory_update(block_m, clip, delta_mode, interpret)(
+        x, h, w, u, b, delta_mean, scale, gamma)
+
+
+# ---------------------------------------------------------------------------
+# Standalone Eq. 7 predict fill (the pipelined schedule's staleness fill)
+# ---------------------------------------------------------------------------
+
+
+def _predict_kernel(s_ref, dmean_ref, scale_ref, out_ref, *, clip):
+    s = s_ref[...].astype(jnp.float32)
+    dmean = dmean_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)[:, None]
+    out = s + jnp.clip(scale * dmean, -clip, clip)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "clip", "interpret"))
+def _pres_predict_pallas(s_prev, delta_mean, scale, *, block_m: int = 256,
+                         clip: float = 5.0, interpret: bool = True):
+    """s_prev/delta_mean: (M, D), scale: (M,) -> extrapolated rows (M, D)."""
+    m, d = s_prev.shape
+    pad_m = (-m) % block_m
+    if pad_m:
+        s_prev = jnp.pad(s_prev, ((0, pad_m), (0, 0)))
+        delta_mean = jnp.pad(delta_mean, ((0, pad_m), (0, 0)))
+        scale = jnp.pad(scale, (0, pad_m))
+    mm = s_prev.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_predict_kernel, clip=clip),
+        grid=(mm // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mm, d), s_prev.dtype),
+        interpret=interpret,
+    )(s_prev, delta_mean, scale)
+    return out[:m]
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_predict(block_m: int, clip: float, interpret: bool):
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_pres_predict_pallas, block_m=block_m, clip=clip,
+                          interpret=interpret),
+        functools.partial(ref.pres_predict_ref, clip=clip))
+
+
+def pres_predict(s_prev, delta_mean, scale, *, block_m: int = 256,
+                 clip: float = 5.0, interpret: bool = True):
+    """Differentiable Eq. 7 extrapolation fill."""
+    return _diff_predict(block_m, clip, interpret)(s_prev, delta_mean, scale)

@@ -65,26 +65,13 @@ def _neighbor_attn_pallas(q, k, v, valid, *, block_m: int = 128,
 
 @functools.lru_cache(maxsize=None)
 def _diff_attn(block_m: int, interpret: bool):
-    """custom_vjp wrapper: Pallas forward, oracle backward (pallas_call has
-    no VJP rule)."""
-    from repro.kernels import ref
-
-    @jax.custom_vjp
-    def f(q, k, v, valid):
-        return _neighbor_attn_pallas(q, k, v, valid, block_m=block_m,
-                                     interpret=interpret)
-
-    def fwd(q, k, v, valid):
-        return f(q, k, v, valid), (q, k, v, valid)
-
-    def bwd(res, g):
-        q, k, v, valid = res
-        _, vjp = jax.vjp(lambda qq, kk, vv: ref.neighbor_attn_ref(
-            qq, kk, vv, valid), q, k, v)
-        return vjp(g) + (None,)
-
-    f.defvjp(fwd, bwd)
-    return f
+    """Pallas forward, oracle backward (kernels/autodiff.py::oracle_vjp);
+    the boolean validity mask gets no cotangent."""
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_neighbor_attn_pallas, block_m=block_m,
+                          interpret=interpret),
+        ref.neighbor_attn_ref, nondiff=(3,))
 
 
 def neighbor_attn(q, k, v, valid, *, block_m: int = 128,

@@ -1,17 +1,33 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Kernel registry + jit'd public wrappers for the Pallas kernels.
 
-On a real TPU, `interpret=False` compiles to Mosaic; on this CPU container
-the kernels run in interpret mode (the kernel body executed in Python),
-which is how the tests validate them against the pure-jnp oracles in
-`repro.kernels.ref`.
+Every kernel is registered as a `KernelSpec`: the differentiable Pallas
+entry point (custom_vjp forward, oracle backward), the pure-jnp oracle in
+`repro.kernels.ref` it must match bit-for-bit in interpret mode (the parity
+target the tests and the CI kernel-parity step check), and the default
+block-size policy. `dispatch(name, ...)` is the single entry point the
+model/training code routes through; the legacy per-kernel functions below
+remain as thin dispatch aliases.
+
+Interpret policy: on a real TPU `interpret=False` compiles to Mosaic; on
+this CPU container every kernel runs in interpret mode (the kernel body
+executed in Python) — numerics are identical, so parity tests and the
+use_kernels training path stay valid without a TPU. Callers can force
+either mode with the `interpret` kwarg. See docs/KERNELS.md for the
+per-kernel math, tiling choices and the "add a kernel" recipe.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Callable, Mapping
+
 import jax
 
+from repro.kernels import flash_attn as _fa
 from repro.kernels import gru_cell as _gru
+from repro.kernels import memory_update as _mu
 from repro.kernels import neighbor_attn as _nattn
 from repro.kernels import pres_filter as _pf
+from repro.kernels import ref
 from repro.kernels import ssd_chunk as _ssd
 
 
@@ -19,9 +35,78 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def gru_cell(x, h, w, u, b, **kw):
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered Pallas kernel and its validation contract."""
+    name: str
+    impl: Callable[..., Any]       # differentiable Pallas entry point
+    ref: Callable[..., Any]        # pure-jnp oracle (parity + VJP target)
+    blocks: Mapping[str, int]      # default tile sizes forwarded to impl
+    doc: str                       # one-line role (details: docs/KERNELS.md)
+
+
+REGISTRY: dict[str, KernelSpec] = {}
+
+
+def _register(spec: KernelSpec) -> None:
+    REGISTRY[spec.name] = spec
+
+
+_register(KernelSpec(
+    name="gru_cell", impl=_gru.gru_cell, ref=ref.gru_cell_ref,
+    blocks={"block_m": 128},
+    doc="fused GRU memory cell (both matmuls + gates, one HBM round trip)"))
+_register(KernelSpec(
+    name="pres_filter", impl=_pf.pres_filter, ref=ref.pres_filter_ref,
+    blocks={"block_m": 256},
+    doc="PRES predict->correct->delta-rate over touched rows (Eqs. 7-9)"))
+_register(KernelSpec(
+    name="pres_predict", impl=_mu.pres_predict, ref=ref.pres_predict_ref,
+    blocks={"block_m": 256},
+    doc="standalone Eq. 7 extrapolation (pipeline staleness fill)"))
+_register(KernelSpec(
+    name="memory_update", impl=_mu.memory_update, ref=ref.memory_update_ref,
+    blocks={"block_m": 128},
+    doc="fused GRU + PRES filter + delta-rate memory-maintenance step"))
+_register(KernelSpec(
+    name="neighbor_attn", impl=_nattn.neighbor_attn,
+    ref=ref.neighbor_attn_ref, blocks={},
+    doc="TGN temporal neighbour attention (softmax stays in VMEM)"))
+_register(KernelSpec(
+    name="ssd_chunk", impl=_ssd.ssd_chunk, ref=ref.ssd_chunk_ref, blocks={},
+    doc="one SSD / mLSTM chunk with carried state"))
+_register(KernelSpec(
+    name="flash_attn", impl=_fa.flash_attn, ref=_fa.flash_attn_ref,
+    blocks={},
+    doc="flash attention (causal/windowed/GQA) for the zoo substrate"))
+
+
+def get_kernel(name: str) -> KernelSpec:
+    """Look up a registered kernel (raises KeyError with the known names)."""
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{sorted(REGISTRY)}") from None
+
+
+def dispatch(name: str, *args, **kw):
+    """Single dispatch point: registry defaults (block sizes, interpret
+    policy) merged under the caller's kwargs, then the Pallas impl."""
+    spec = get_kernel(name)
+    for k, v in spec.blocks.items():
+        kw.setdefault(k, v)
     kw.setdefault("interpret", _interpret_default())
-    return _gru.gru_cell(x, h, w, u, b, **kw)
+    return spec.impl(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-kernel wrappers (thin dispatch aliases)
+# ---------------------------------------------------------------------------
+
+
+def gru_cell(x, h, w, u, b, **kw):
+    return dispatch("gru_cell", x, h, w, u, b, **kw)
 
 
 def gru_cell_params(params, x, h, **kw):
@@ -30,21 +115,25 @@ def gru_cell_params(params, x, h, **kw):
 
 
 def pres_filter(s_prev, s_meas, delta_mean, dt, gamma, **kw):
-    kw.setdefault("interpret", _interpret_default())
-    return _pf.pres_filter(s_prev, s_meas, delta_mean, dt, gamma, **kw)
+    return dispatch("pres_filter", s_prev, s_meas, delta_mean, dt, gamma, **kw)
+
+
+def pres_predict(s_prev, delta_mean, scale, **kw):
+    return dispatch("pres_predict", s_prev, delta_mean, scale, **kw)
+
+
+def memory_update(x, h, w, u, b, delta_mean, scale, gamma, **kw):
+    return dispatch("memory_update", x, h, w, u, b, delta_mean, scale, gamma,
+                    **kw)
 
 
 def neighbor_attn(q, k, v, valid, **kw):
-    kw.setdefault("interpret", _interpret_default())
-    return _nattn.neighbor_attn(q, k, v, valid, **kw)
+    return dispatch("neighbor_attn", q, k, v, valid, **kw)
 
 
 def ssd_chunk(q, k, v, lcum, h0, **kw):
-    kw.setdefault("interpret", _interpret_default())
-    return _ssd.ssd_chunk(q, k, v, lcum, h0, **kw)
+    return dispatch("ssd_chunk", q, k, v, lcum, h0, **kw)
 
 
 def flash_attn(q, k, v, **kw):
-    from repro.kernels import flash_attn as _fa
-    kw.setdefault("interpret", _interpret_default())
-    return _fa.flash_attn(q, k, v, **kw)
+    return dispatch("flash_attn", q, k, v, **kw)

@@ -17,7 +17,7 @@ from jax.experimental import pallas as pl
 
 
 def _filter_kernel(s_prev_ref, s_meas_ref, dmean_ref, dt_ref, gamma_ref,
-                   fused_ref, delta_ref, *, clip):
+                   fused_ref, delta_ref, *, clip, delta_mode):
     s_prev = s_prev_ref[...].astype(jnp.float32)
     s_meas = s_meas_ref[...].astype(jnp.float32)
     dmean = dmean_ref[...].astype(jnp.float32)
@@ -26,15 +26,18 @@ def _filter_kernel(s_prev_ref, s_meas_ref, dmean_ref, dt_ref, gamma_ref,
     step = jnp.clip(dt * dmean, -clip, clip)
     s_pred = s_prev + step
     fused = (1.0 - gamma) * s_pred + gamma * s_meas
-    delta = (fused - s_pred) / jnp.maximum(dt, 1.0)
+    base = s_pred if delta_mode == "innovation" else s_prev
+    delta = (fused - base) / jnp.maximum(dt, 1.0)
     fused_ref[...] = fused.astype(fused_ref.dtype)
     delta_ref[...] = delta.astype(delta_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "clip", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_m", "clip", "interpret",
+                                             "delta_mode"))
 def _pres_filter_pallas(s_prev, s_meas, delta_mean, dt, gamma, *,
                         clip: float = 5.0, block_m: int = 256,
-                        interpret: bool = True):
+                        interpret: bool = True,
+                        delta_mode: str = "innovation"):
     """s_prev/s_meas/delta_mean: (M, D); dt: (M,); gamma: scalar.
     Returns (fused (M, D), delta_rate (M, D))."""
     m, d = s_prev.shape
@@ -46,7 +49,7 @@ def _pres_filter_pallas(s_prev, s_meas, delta_mean, dt, gamma, *,
     mm = s_prev.shape[0]
     gamma_arr = jnp.reshape(gamma.astype(jnp.float32), (1,))
     fused, delta = pl.pallas_call(
-        functools.partial(_filter_kernel, clip=clip),
+        functools.partial(_filter_kernel, clip=clip, delta_mode=delta_mode),
         grid=(mm // block_m,),
         in_specs=[
             pl.BlockSpec((block_m, d), lambda i: (i, 0)),
@@ -69,32 +72,20 @@ def _pres_filter_pallas(s_prev, s_meas, delta_mean, dt, gamma, *,
 
 
 @functools.lru_cache(maxsize=None)
-def _diff_filter(clip: float, block_m: int, interpret: bool):
-    """custom_vjp wrapper: Pallas forward, oracle backward. gamma is the
-    learnable Eq. 8 gate, so gradients must flow to it."""
-    from repro.kernels import ref
-
-    @jax.custom_vjp
-    def f(s_prev, s_meas, delta_mean, dt, gamma):
-        return _pres_filter_pallas(s_prev, s_meas, delta_mean, dt, gamma,
-                                   clip=clip, block_m=block_m,
-                                   interpret=interpret)
-
-    def fwd(s_prev, s_meas, delta_mean, dt, gamma):
-        return f(s_prev, s_meas, delta_mean, dt, gamma), \
-            (s_prev, s_meas, delta_mean, dt, gamma)
-
-    def bwd(res, g):
-        _, vjp = jax.vjp(
-            lambda *a: ref.pres_filter_ref(*a, clip=clip), *res)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
-    return f
+def _diff_filter(clip: float, block_m: int, interpret: bool, delta_mode: str):
+    """Pallas forward, oracle backward (kernels/autodiff.py::oracle_vjp).
+    gamma is the learnable Eq. 8 gate, so gradients must flow to it."""
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_pres_filter_pallas, clip=clip, block_m=block_m,
+                          interpret=interpret, delta_mode=delta_mode),
+        functools.partial(ref.pres_filter_ref, clip=clip,
+                          delta_mode=delta_mode))
 
 
 def pres_filter(s_prev, s_meas, delta_mean, dt, gamma, *, clip: float = 5.0,
-                block_m: int = 256, interpret: bool = True):
+                block_m: int = 256, interpret: bool = True,
+                delta_mode: str = "innovation"):
     """Differentiable fused PRES filter."""
-    return _diff_filter(clip, block_m, interpret)(s_prev, s_meas, delta_mean,
-                                                  dt, gamma)
+    return _diff_filter(clip, block_m, interpret, delta_mode)(
+        s_prev, s_meas, delta_mean, dt, gamma)

@@ -18,14 +18,32 @@ def gru_cell_ref(x, h, w, u, b):
     return (1 - z) * h + z * n
 
 
-def pres_filter_ref(s_prev, s_meas, delta_mean, dt, gamma, clip=5.0):
-    """Fused predict (Eq. 7) -> correct (Eq. 8) -> innovation rate.
+def pres_predict_ref(s_prev, delta_mean, dt, clip=5.0):
+    """Eq. 7 extrapolation fill: s_prev + clip(dt * delta_mean)."""
+    return s_prev + jnp.clip(dt[:, None] * delta_mean, -clip, clip)
+
+
+def pres_filter_ref(s_prev, s_meas, delta_mean, dt, gamma, clip=5.0,
+                    delta_mode="innovation"):
+    """Fused predict (Eq. 7) -> correct (Eq. 8) -> delta rate.
+    delta_mode: "innovation" (Eq. 9) or "transition" (Alg. 2 variant).
     Returns (fused, delta_rate)."""
-    step = jnp.clip(dt[:, None] * delta_mean, -clip, clip)
-    s_pred = s_prev + step
+    s_pred = pres_predict_ref(s_prev, delta_mean, dt, clip=clip)
     fused = (1.0 - gamma) * s_pred + gamma * s_meas
-    delta = (fused - s_pred) / jnp.maximum(dt, 1.0)[:, None]
+    base = s_pred if delta_mode == "innovation" else s_prev
+    delta = (fused - base) / jnp.maximum(dt, 1.0)[:, None]
     return fused, delta
+
+
+def memory_update_ref(x, h, w, u, b, delta_mean, scale, gamma, clip=5.0,
+                      delta_mode="innovation"):
+    """Fused MEMORY maintenance over the touched rows: GRU transition
+    (measurement) -> Eq. 7 predict -> Eq. 8 correct -> delta rate.
+    Returns (s_meas, fused, delta_rate), each (M, D)."""
+    s_meas = gru_cell_ref(x, h, w, u, b)
+    fused, delta = pres_filter_ref(h, s_meas, delta_mean, scale, gamma,
+                                   clip=clip, delta_mode=delta_mode)
+    return s_meas, fused, delta
 
 
 def neighbor_attn_ref(q, k, v, valid):

@@ -76,22 +76,11 @@ def _ssd_chunk_pallas(q, k, v, lcum, h0, *, interpret: bool = True):
 
 @functools.lru_cache(maxsize=None)
 def _diff_ssd(interpret: bool):
-    """custom_vjp wrapper: Pallas forward, oracle backward."""
-    from repro.kernels import ref
-
-    @jax.custom_vjp
-    def f(q, k, v, lcum, h0):
-        return _ssd_chunk_pallas(q, k, v, lcum, h0, interpret=interpret)
-
-    def fwd(q, k, v, lcum, h0):
-        return f(q, k, v, lcum, h0), (q, k, v, lcum, h0)
-
-    def bwd(res, g):
-        _, vjp = jax.vjp(jax.vmap(ref.ssd_chunk_ref), *res)
-        return vjp(g)
-
-    f.defvjp(fwd, bwd)
-    return f
+    """Pallas forward, oracle backward (kernels/autodiff.py::oracle_vjp)."""
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_ssd_chunk_pallas, interpret=interpret),
+        jax.vmap(ref.ssd_chunk_ref))
 
 
 def ssd_chunk(q, k, v, lcum, h0, *, interpret: bool = True):

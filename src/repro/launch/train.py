@@ -46,8 +46,10 @@ def main(argv=None):
                     help="attention heads in the embedding stack")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-kernels", action="store_true",
-                    help="route the memory GRU and the embedding attention "
-                         "through the Pallas kernels")
+                    help="route the full memory-maintenance step (fused GRU"
+                         " + PRES filter kernel under --pres, gru_cell "
+                         "otherwise) and the embedding attention through "
+                         "the registered Pallas kernels (docs/KERNELS.md)")
     ap.add_argument("--pipeline-depth", type=int, default=0,
                     help="staleness-aware pipelined schedule: the embedding "
                          "stage reads a memory snapshot at most K batch-"
@@ -80,8 +82,9 @@ def main(argv=None):
     state = init_state(cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
-    # cfg.use_kernels routes both the memory GRU and the embedding attention
-    # through the Pallas kernels inside make_train_step / embed_nodes;
+    # cfg.use_kernels routes the full memory-maintenance step and the
+    # embedding attention through the kernel registry (docs/KERNELS.md)
+    # inside make_train_step / embed_nodes;
     # cfg.pipeline_depth routes through the staleness-aware pipelined
     # schedule (repro.train.pipeline — depth 0 delegates to the sequential
     # loop, bit-exact)

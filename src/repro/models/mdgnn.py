@@ -164,6 +164,31 @@ def _last_occurrence_flags(nodes, times, mask):
     return flags
 
 
+def scatter_rows(table, write_idx, values):
+    """Masked row scatter with the drop-slot trick: index n_nodes (one past
+    the end) is a dump row for masked-off updates, so the scatter itself
+    stays dense and branch-free."""
+    pad = jnp.zeros((1,) + table.shape[1:], table.dtype)
+    out = jnp.concatenate([table, pad])
+    return out.at[write_idx].set(values.astype(table.dtype), mode="drop")[:-1]
+
+
+def memory_inputs(params, cfg: MDGNNConfig, mem: MemoryState,
+                  batch: EventBatch):
+    """MESSAGE stage + per-occurrence bookkeeping shared by the cell-based
+    memory update below and the fused-kernel path
+    (train/loop.py::_fused_memory_update).
+
+    Returns (nodes, times, msgs, mask, selected, h_prev)."""
+    nodes, times, msgs, mask = compute_messages(params, cfg, mem, batch)
+    if cfg.aggregator == "mean":
+        mean_n, _ = batching.mean_per_node(nodes, msgs, mask, cfg.n_nodes)
+        msgs = mean_n[nodes]  # every occurrence carries its node's mean message
+    selected = _last_occurrence_flags(nodes, times, mask)
+    h_prev = mem.mem[nodes].astype(jnp.float32)  # (2b, D)
+    return nodes, times, msgs, mask, selected, h_prev
+
+
 def memory_update(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBatch,
                   gru_fn=None, defer_write: bool = False):
     """Batch-parallel memory transition: ONE update per touched node (the
@@ -176,12 +201,8 @@ def memory_update(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBatch,
     table write is skipped (PRES overwrites the same rows with the fused
     values — writing twice costs a full extra scatter+combine at production
     scale, docs/EXPERIMENTS.md §Perf iteration 5)."""
-    nodes, times, msgs, mask = compute_messages(params, cfg, mem, batch)
-    if cfg.aggregator == "mean":
-        mean_n, _ = batching.mean_per_node(nodes, msgs, mask, cfg.n_nodes)
-        msgs = mean_n[nodes]  # every occurrence carries its node's mean message
-    selected = _last_occurrence_flags(nodes, times, mask)
-    h_prev = mem.mem[nodes].astype(jnp.float32)  # (2b, D)
+    nodes, times, msgs, mask, selected, h_prev = memory_inputs(
+        params, cfg, mem, batch)
     _, cell = modules.MEMORY_CELLS[cfg.memory_cell]
     if gru_fn is not None and cfg.memory_cell == "gru":
         cell = gru_fn
@@ -196,12 +217,8 @@ def memory_update(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBatch,
     if defer_write:
         new_mem = mem.mem
     else:
-        new_mem = jnp.concatenate([mem.mem, jnp.zeros((1, mem.mem.shape[1]),
-                                                      mem.mem.dtype)])
-        new_mem = new_mem.at[write_idx].set(
-            new_rows.astype(new_mem.dtype), mode="drop")[:-1]
-    new_t = jnp.concatenate([mem.last_update, jnp.zeros((1,), jnp.float32)])
-    new_t = new_t.at[write_idx].set(times, mode="drop")[:-1]
+        new_mem = scatter_rows(mem.mem, write_idx, new_rows)
+    new_t = scatter_rows(mem.last_update, write_idx, times)
     info = {
         "nodes": nodes, "selected": selected, "mask": mask,
         "s_prev": h_prev, "s_meas": new_rows,

@@ -81,8 +81,11 @@ def gru_init(b: ParamBuilder, name: str, d_in: int, d_hidden: int):
 
 
 def gru_cell(params, x, h):
-    """x: (B, d_in), h: (B, d_hidden) -> new h. Reference (pure-jnp) path;
-    the Pallas kernel in repro.kernels.gru_cell fuses this on TPU."""
+    """x: (B, d_in), h: (B, d_hidden) -> new h. Pure-jnp path; with
+    cfg.use_kernels the training step swaps in the registered Pallas kernel
+    instead (`kernel_memory_cell` below -> `kernels/ops.py` registry entry
+    "gru_cell"; under PRES the whole maintenance step fuses into
+    "memory_update" — docs/KERNELS.md)."""
     gx = x @ params["w"] + params["b"]
     gh = h @ params["u"]
     d = h.shape[-1]
@@ -106,3 +109,17 @@ def rnn_cell(params, x, h):
 
 
 MEMORY_CELLS = {"gru": (gru_init, gru_cell), "rnn": (rnn_init, rnn_cell)}
+
+
+def kernel_memory_cell(cfg):
+    """Resolve the Pallas-backed MEMORY cell for this config, or None.
+
+    Returns the registry-dispatched `gru_cell` adapter when cfg.use_kernels
+    asks for kernel routing and the cell has a registered kernel; the
+    training steps pass the result as `gru_fn` to `mdgnn.memory_update`
+    (None keeps the pure-jnp cell above). Single dispatch point:
+    `kernels/ops.py::dispatch` (docs/KERNELS.md §Registry)."""
+    if cfg.use_kernels and cfg.memory_cell == "gru":
+        from repro.kernels import ops as kops
+        return kops.gru_cell_params
+    return None

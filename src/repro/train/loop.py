@@ -20,18 +20,17 @@ from repro.core import batching, coherence, pres
 from repro.train import annotate
 from repro.graph.events import EventBatch, EventStream
 from repro.graph.negatives import sample_negatives
-from repro.models import mdgnn
+from repro.models import mdgnn, modules
 from repro.models.mdgnn import MDGNNConfig, MemoryState
 from repro.utils import metrics as metrics_lib
 
 
-def _apply_pres(params, cfg, mem2, info, pres_state):
-    """Fuse the measured memory rows with the GMM prediction and write the
-    fused rows back into the table. Returns (mem_state, fused_rows, deltas).
+def _pres_scale_and_ids(cfg, info):
+    """Eq. 7 extrapolation scale + tracker ids for the touched occurrences.
 
-    Eq. 7 scale: "count" extrapolates by the node's pending-event count in
-    the batch — the number of sequential GRU transitions flattened into one
-    by batch processing. MDGNN memory moves per EVENT, not per unit time, so
+    Scale: "count" extrapolates by the node's pending-event count in the
+    batch — the number of sequential GRU transitions flattened into one by
+    batch processing. MDGNN memory moves per EVENT, not per unit time, so
     this directly reconstructs the missed accumulation (docs/EXPERIMENTS.md
     §Paper-validation compares it against the paper-literal "time" scale)."""
     if cfg.pres_scale == "count":
@@ -45,22 +44,106 @@ def _apply_pres(params, cfg, mem2, info, pres_state):
     # Sec. 5.3 anchor-set approximation: GMM trackers live in hash buckets
     pres_ids = (info["nodes"] % cfg.pres_buckets if cfg.pres_buckets
                 else info["nodes"])
-    s_pred = pres.predict(pres_state, info["s_prev"], scale, pres_ids,
-                          clip=cfg.pres_clip)
-    fused = pres.correct(params["pres"], s_pred, info["s_meas"])
+    return scale, pres_ids
+
+
+def _apply_pres(params, cfg, mem2, info, pres_state):
+    """Fuse the measured memory rows with the GMM prediction and write the
+    fused rows back into the table. Returns (mem_state, fused_rows, deltas).
+
+    With cfg.use_kernels the predict -> correct -> delta-rate elementwise
+    chain runs in the registered Pallas kernel "pres_filter" (one VMEM tile
+    pass instead of ~6 HBM round trips); the GMM mixture-mean gather stays
+    in XLA (docs/KERNELS.md §Boundary)."""
+    scale, pres_ids = _pres_scale_and_ids(cfg, info)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        dmean = pres.mixture_mean(pres_state, pres_ids)
+        gamma = jax.nn.sigmoid(params["pres"]["gamma_logit"])
+        fused, delta = kops.pres_filter(
+            info["s_prev"], info["s_meas"], dmean, scale, gamma,
+            clip=cfg.pres_clip, delta_mode=cfg.delta_mode)
+    else:
+        s_pred = pres.predict(pres_state, info["s_prev"], scale, pres_ids,
+                              clip=cfg.pres_clip)
+        fused = pres.correct(params["pres"], s_pred, info["s_meas"])
+        # deltas are tracked per unit of `scale` so Eq. 7's extrapolation is
+        # dimensionally consistent in either mode
+        if cfg.delta_mode == "innovation":
+            delta = (fused - s_pred) / jnp.maximum(scale, 1.0)[:, None]
+        else:  # "transition" (Alg. 2): total memory movement per unit scale
+            delta = (fused - info["s_prev"]) / jnp.maximum(scale, 1.0)[:, None]
     fused = annotate.compact(fused)   # compact-update boundary (see annotate)
     write_idx = jnp.where(info["selected"], info["nodes"], cfg.n_nodes)
-    table = jnp.concatenate([mem2.mem, jnp.zeros((1, mem2.mem.shape[1]),
-                                                 mem2.mem.dtype)])
-    table = table.at[write_idx].set(fused.astype(table.dtype),
-                                    mode="drop")[:-1]
-    # deltas are tracked per unit of `scale` so Eq. 7's extrapolation is
-    # dimensionally consistent in either mode
-    if cfg.delta_mode == "innovation":
-        delta = (fused - s_pred) / jnp.maximum(scale, 1.0)[:, None]
-    else:  # "transition" (Alg. 2): total memory movement per unit scale
-        delta = (fused - info["s_prev"]) / jnp.maximum(scale, 1.0)[:, None]
+    table = mdgnn.scatter_rows(mem2.mem, write_idx, fused)
     return MemoryState(mem=table, last_update=mem2.last_update), fused, delta
+
+
+def _fused_memory_update(params, cfg, state, prev_batch: EventBatch):
+    """The whole memory-maintenance step in ONE fused Pallas pass over the
+    touched rows (registry kernel "memory_update"): GRU gates, Eq. 7
+    predict, Eq. 8 correct and the delta-rate statistic per VMEM tile — one
+    HBM read + one write per row instead of the cell/filter round trips
+    (docs/KERNELS.md §memory_update). Gathers (memory rows, GMM mixture
+    means) and the final table scatter stay in XLA.
+
+    Returns (mem_state, info, fused, delta) matching
+    mdgnn.memory_update + _apply_pres numerics bit-for-bit in fp32."""
+    from repro.kernels import ops as kops
+    mem = state["memory"]
+    nodes, times, msgs, mask, selected, h_prev = mdgnn.memory_inputs(
+        params, cfg, mem, prev_batch)
+    # compact-update boundary (repro.train.annotate), as in memory_update
+    times = annotate.compact(times)
+    selected = annotate.compact(selected)
+    nodes = annotate.compact(nodes)
+    info = {"nodes": nodes, "selected": selected, "mask": mask,
+            "s_prev": h_prev, "t_prev": mem.last_update[nodes],
+            "t_now": times, "msgs": msgs}
+    scale, pres_ids = _pres_scale_and_ids(cfg, info)
+    dmean = pres.mixture_mean(state["pres"], pres_ids)
+    gamma = jax.nn.sigmoid(params["pres"]["gamma_logit"])
+    s_meas, fused, delta = kops.memory_update(
+        msgs, h_prev, params["mem"]["w"], params["mem"]["u"],
+        params["mem"]["b"], dmean, scale, gamma,
+        clip=cfg.pres_clip, delta_mode=cfg.delta_mode)
+    # same compact-update boundary the cell path puts on its new_rows
+    info["s_meas"] = annotate.compact(s_meas)
+    fused = annotate.compact(fused)
+    write_idx = jnp.where(selected, nodes, cfg.n_nodes)
+    new_mem = mdgnn.scatter_rows(mem.mem, write_idx, fused)
+    new_t = mdgnn.scatter_rows(mem.last_update, write_idx, times)
+    return (MemoryState(mem=new_mem, last_update=new_t), info, fused, delta)
+
+
+def memory_and_pres(params, cfg: MDGNNConfig, state, prev_batch: EventBatch,
+                    gru_fn=None):
+    """MEMORY stage + PRES fusion, shared by the sequential, eval and
+    pipelined steps, with kernel routing (docs/KERNELS.md §Dispatch):
+
+    * use_kernels + PRES + GRU  -> the fused "memory_update" kernel
+    * use_kernels otherwise     -> "gru_cell" (via gru_fn) and/or
+                                   "pres_filter" kernels separately
+    * no kernels                -> pure-jnp cell + pres.predict/correct
+
+    Returns (mem_state, info, fused_rows, deltas); without PRES the fused
+    rows are the raw measurements and the deltas are zero.
+
+    An explicitly overridden memory cell (gru_fn other than the registry
+    default) suppresses the fused path — the caller asked for that exact
+    cell to run."""
+    if (cfg.use_kernels and cfg.use_pres and cfg.memory_cell == "gru"
+            and gru_fn in (None, modules.kernel_memory_cell(cfg))):
+        return _fused_memory_update(params, cfg, state, prev_batch)
+    mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
+                                     prev_batch, gru_fn=gru_fn,
+                                     defer_write=cfg.use_pres)
+    fused = info["s_meas"]
+    delta = jnp.zeros_like(fused)
+    if cfg.use_pres:
+        mem2, fused, delta = _apply_pres(params, cfg, mem2, info,
+                                         state["pres"])
+    return mem2, info, fused, delta
 
 
 def endpoint_logits(params, cfg: MDGNNConfig, state2, pos: EventBatch,
@@ -120,24 +203,21 @@ def maintain_state(cfg: MDGNNConfig, params, state2, aux,
 def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
     """Returns a jitted train_step closure.
 
-    cfg.use_kernels routes BOTH Pallas hot paths: the memory GRU (gru_fn
-    defaults to the kernel adapter) and the embedding stack's neighbour
-    attention (resolved inside embed_nodes, docs/DESIGN.md §Embedding
-    stack). Pass gru_fn explicitly to override the memory cell only."""
-    if gru_fn is None and cfg.use_kernels and cfg.memory_cell == "gru":
-        from repro.kernels import ops as kops
-        gru_fn = kops.gru_cell_params
+    cfg.use_kernels routes the FULL memory-maintenance path plus the
+    embedding attention through the registered Pallas kernels
+    (docs/KERNELS.md): under PRES+GRU the whole update fuses into the
+    "memory_update" kernel; otherwise the memory cell ("gru_cell", resolved
+    by modules.kernel_memory_cell) and the PRES filter ("pres_filter")
+    route separately, and the neighbour attention resolves inside
+    embed_nodes (docs/DESIGN.md §Embedding stack). Pass gru_fn explicitly
+    to override the memory cell only."""
+    if gru_fn is None:
+        gru_fn = modules.kernel_memory_cell(cfg)
 
     def loss_and_state(params, state, prev_batch: EventBatch,
                        pos: EventBatch, neg: EventBatch):
-        mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
-                                         prev_batch, gru_fn=gru_fn,
-                                         defer_write=cfg.use_pres)
-        fused = info["s_meas"]
-        delta = jnp.zeros_like(fused)
-        if cfg.use_pres:
-            mem2, fused, delta = _apply_pres(params, cfg, mem2, info,
-                                             state["pres"])
+        mem2, info, fused, delta = memory_and_pres(params, cfg, state,
+                                                   prev_batch, gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         # ------------------------------------------------ link prediction --
         logit_p, logit_n = endpoint_logits(params, cfg, state2, pos, neg)
@@ -173,12 +253,11 @@ def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
 
 
 def make_eval_step(cfg: MDGNNConfig):
+    gru_fn = modules.kernel_memory_cell(cfg)
+
     def eval_step(params, state, prev_batch, pos, neg):
-        mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
-                                         prev_batch,
-                                         defer_write=cfg.use_pres)
-        if cfg.use_pres:
-            mem2, _, _ = _apply_pres(params, cfg, mem2, info, state["pres"])
+        mem2, _, _, _ = memory_and_pres(params, cfg, state, prev_batch,
+                                        gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         state2 = dict(state2, neighbors=batching.update_neighbors(
             state2["neighbors"], prev_batch))

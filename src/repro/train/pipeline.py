@@ -40,7 +40,7 @@ import numpy as np
 from repro.core import coherence, pres
 from repro.graph.events import EventBatch
 from repro.graph.negatives import sample_negatives
-from repro.models import mdgnn
+from repro.models import modules
 from repro.models.mdgnn import MDGNNConfig, MemoryState
 from repro.train import loop as loop_lib
 from repro.utils import metrics as metrics_lib
@@ -86,7 +86,12 @@ def stale_read_table(cfg: MDGNNConfig, pres_state, pstate: PipelineState,
     pending-occurrence count per node, "time" the gap between the live and
     snapshot last-update times. Nodes with no in-flight write have scale 0,
     so their rows pass through untouched; without PRES the trackers are
-    empty (zero deltas) and this degrades to a raw stale read."""
+    empty (zero deltas) and this degrades to a raw stale read.
+
+    With cfg.use_kernels the whole-table extrapolation runs in the
+    registered Pallas kernel "pres_predict" — one elementwise pass over the
+    (N, D) table instead of three (docs/KERNELS.md §pres_predict); the GMM
+    mixture-mean gather stays in XLA."""
     n = pstate.read_mem.shape[0]
     ids = jnp.arange(n, dtype=jnp.int32)
     pres_ids = ids % cfg.pres_buckets if cfg.pres_buckets else ids
@@ -94,8 +99,14 @@ def stale_read_table(cfg: MDGNNConfig, pres_state, pstate: PipelineState,
         scale = pstate.pending
     else:  # "time"
         scale = jnp.maximum(live_last_update - pstate.read_last_update, 0.0)
-    filled = pres.predict(pres_state, pstate.read_mem.astype(jnp.float32),
-                          scale, pres_ids, clip=cfg.pres_clip)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        dmean = pres.mixture_mean(pres_state, pres_ids)
+        filled = kops.pres_predict(pstate.read_mem.astype(jnp.float32),
+                                   dmean, scale, clip=cfg.pres_clip)
+    else:
+        filled = pres.predict(pres_state, pstate.read_mem.astype(jnp.float32),
+                              scale, pres_ids, clip=cfg.pres_clip)
     return filled.astype(pstate.read_mem.dtype)
 
 
@@ -129,22 +140,15 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
             "gradient path); set use_smoothing=True with beta > 0 (the "
             "default when use_pres=True), or train with pipeline_depth=0 "
             "(docs/PIPELINE.md §Staleness semantics)")
-    if gru_fn is None and cfg.use_kernels and cfg.memory_cell == "gru":
-        from repro.kernels import ops as kops
-        gru_fn = kops.gru_cell_params
+    if gru_fn is None:
+        gru_fn = modules.kernel_memory_cell(cfg)
 
     def loss_and_state(params, state, pstate: PipelineState,
                        prev_batch: EventBatch, pos: EventBatch,
                        neg: EventBatch):
-        # ------------------------------------------- MEMORY stage (live) --
-        mem2, info = mdgnn.memory_update(params, cfg, state["memory"],
-                                         prev_batch, gru_fn=gru_fn,
-                                         defer_write=cfg.use_pres)
-        fused = info["s_meas"]
-        delta = jnp.zeros_like(fused)
-        if cfg.use_pres:
-            mem2, fused, delta = loop_lib._apply_pres(params, cfg, mem2, info,
-                                                      state["pres"])
+        # --------- MEMORY stage (live) — kernel routing in memory_and_pres
+        mem2, info, fused, delta = loop_lib.memory_and_pres(
+            params, cfg, state, prev_batch, gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         # ------------------------------- staleness accounting + read view --
         occ = jax.ops.segment_sum(

@@ -112,6 +112,140 @@ def test_pres_filter_gamma_extremes():
     np.testing.assert_allclose(np.asarray(fused0), np.asarray(s_prev), atol=1e-6)
 
 
+@pytest.mark.parametrize("delta_mode", ["innovation", "transition"])
+def test_pres_filter_delta_modes_match_ref(delta_mode):
+    rng = np.random.default_rng(31)
+    n, d = 100, 48
+    s_prev = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    s_meas = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    dm = jnp.asarray(rng.normal(size=(n, d)) * 0.01, jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(n,)), jnp.float32))
+    gamma = jnp.asarray(0.3, jnp.float32)
+    got = ops.pres_filter(s_prev, s_meas, dm, dt, gamma, interpret=True,
+                          delta_mode=delta_mode)
+    want = ref.pres_filter_ref(s_prev, s_meas, dm, dt, gamma,
+                               delta_mode=delta_mode)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+    # the two modes genuinely differ on the delta output
+    other = ref.pres_filter_ref(
+        s_prev, s_meas, dm, dt, gamma,
+        delta_mode="transition" if delta_mode == "innovation" else "innovation")
+    assert float(jnp.abs(want[1] - other[1]).max()) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# pres_predict (the pipelined schedule's staleness fill)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d", [(1, 16), (200, 64), (400, 32)])
+def test_pres_predict_matches_ref(n, d):
+    rng = np.random.default_rng(n + d)
+    s_prev = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    dm = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    scale = jnp.abs(jnp.asarray(rng.normal(size=(n,)) * 3, jnp.float32))
+    got = ops.pres_predict(s_prev, dm, scale, interpret=True, clip=1.0)
+    want = ref.pres_predict_ref(s_prev, dm, scale, clip=1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    # clip engaged for at least some rows at this magnitude
+    assert float(jnp.abs(got - s_prev).max()) <= 1.0 + 1e-6
+
+
+def test_pres_predict_gradients_match_oracle():
+    rng = np.random.default_rng(33)
+    n, d = 64, 32
+    args = [jnp.asarray(rng.normal(size=(n, d)) * 0.3, jnp.float32),
+            jnp.asarray(rng.normal(size=(n, d)) * 0.1, jnp.float32),
+            jnp.abs(jnp.asarray(rng.normal(size=(n,)), jnp.float32))]
+    gk = jax.grad(lambda *a: jnp.sum(
+        ops.pres_predict(*a, interpret=True) ** 2), argnums=(0, 1, 2))(*args)
+    gr = jax.grad(lambda *a: jnp.sum(
+        ref.pres_predict_ref(*a) ** 2), argnums=(0, 1, 2))(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# memory_update (fused GRU + PRES filter + delta-rate)
+# ---------------------------------------------------------------------------
+
+
+def _memory_update_args(rng, m, d):
+    return (jnp.asarray(rng.normal(size=(m, d)), jnp.float32),        # x
+            jnp.asarray(rng.normal(size=(m, d)), jnp.float32),        # h
+            jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32),
+            jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32),
+            jnp.asarray(rng.normal(size=(3 * d,)) * 0.01, jnp.float32),
+            jnp.asarray(rng.normal(size=(m, d)) * 0.01, jnp.float32),  # dmean
+            jnp.abs(jnp.asarray(rng.normal(size=(m,)), jnp.float32)),  # scale
+            jnp.asarray(0.4, jnp.float32))                             # gamma
+
+
+@pytest.mark.parametrize("m", [1, 64, 300])
+@pytest.mark.parametrize("delta_mode", ["innovation", "transition"])
+def test_memory_update_matches_ref(m, delta_mode):
+    rng = np.random.default_rng(m)
+    args = _memory_update_args(rng, m, 32)
+    got = ops.memory_update(*args, interpret=True, clip=1.0,
+                            delta_mode=delta_mode)
+    want = ref.memory_update_ref(*args, clip=1.0, delta_mode=delta_mode)
+    assert len(got) == 3
+    for g, w in zip(got, want):
+        assert g.shape == (m, 32)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+
+def test_memory_update_matches_composed_kernels():
+    """The fused kernel must equal gru_cell followed by pres_filter — the
+    two-kernel chain it replaces."""
+    rng = np.random.default_rng(41)
+    args = _memory_update_args(rng, 128, 48)
+    x, h, w, u, b, dm, scale, gamma = args
+    s_meas, fused, delta = ops.memory_update(*args, interpret=True, clip=1.0)
+    s_meas2 = ops.gru_cell(x, h, w, u, b, interpret=True)
+    fused2, delta2 = ops.pres_filter(h, s_meas2, dm, scale, gamma,
+                                     interpret=True, clip=1.0)
+    np.testing.assert_allclose(np.asarray(s_meas), np.asarray(s_meas2),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(fused2),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(delta2),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_entries_complete():
+    """Every kernel has a Pallas impl, a ref oracle (the parity target) and
+    a one-line doc; dispatch resolves by name."""
+    expected = {"gru_cell", "pres_filter", "pres_predict", "memory_update",
+                "neighbor_attn", "ssd_chunk", "flash_attn"}
+    assert expected == set(ops.REGISTRY)
+    for name, spec in ops.REGISTRY.items():
+        assert spec.name == name
+        assert callable(spec.impl) and callable(spec.ref)
+        assert spec.doc
+    with pytest.raises(KeyError, match="unknown kernel"):
+        ops.get_kernel("nope")
+
+
+def test_registry_dispatch_equals_wrapper():
+    rng = np.random.default_rng(5)
+    d = 32
+    x = jnp.asarray(rng.normal(size=(17, d)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(17, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32)
+    b = jnp.zeros((3 * d,), jnp.float32)
+    got = ops.dispatch("gru_cell", x, h, w, u, b, interpret=True)
+    want = ops.gru_cell(x, h, w, u, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # ---------------------------------------------------------------------------
 # neighbor_attn
 # ---------------------------------------------------------------------------
@@ -302,6 +436,49 @@ def test_neighbor_attn_gradients_match_oracle():
         ref.neighbor_attn_ref(a, b, c, valid) ** 2), argnums=(0, 1, 2))(q, kk, v)
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("delta_mode", ["innovation", "transition"])
+def test_memory_update_gradients_match_oracle(delta_mode):
+    """The fused kernel's custom VJP vs jax.grad of the composed oracle,
+    over every differentiable input."""
+    rng = np.random.default_rng(42)
+    args = _memory_update_args(rng, 96, 32)
+    argnums = tuple(range(len(args)))
+
+    def loss_k(*a):
+        s_meas, fused, delta = ops.memory_update(*a, interpret=True,
+                                                 delta_mode=delta_mode)
+        return jnp.sum(fused ** 2) + jnp.sum(delta ** 2) + jnp.sum(s_meas ** 2)
+
+    def loss_r(*a):
+        s_meas, fused, delta = ref.memory_update_ref(*a,
+                                                     delta_mode=delta_mode)
+        return jnp.sum(fused ** 2) + jnp.sum(delta ** 2) + jnp.sum(s_meas ** 2)
+
+    gk = jax.grad(loss_k, argnums=argnums)(*args)
+    gr = jax.grad(loss_r, argnums=argnums)(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_memory_update_gamma_gradient_flows():
+    """gamma is the learnable Eq. 8 gate — the fused kernel must pass its
+    gradient through (it is how the filter learns how much to trust the
+    measurement)."""
+    rng = np.random.default_rng(43)
+    args = _memory_update_args(rng, 64, 16)
+
+    def loss(gamma):
+        _, fused, _ = ops.memory_update(*args[:-1], gamma, interpret=True)
+        return jnp.sum(fused ** 2)
+
+    g = jax.grad(loss)(jnp.asarray(0.5, jnp.float32))
+    g_ref = jax.grad(lambda gm: jnp.sum(
+        ref.memory_update_ref(*args[:-1], gm)[1] ** 2))(
+            jnp.asarray(0.5, jnp.float32))
+    assert abs(float(g)) > 0
+    np.testing.assert_allclose(float(g), float(g_ref), rtol=1e-4)
 
 
 def test_ssd_chunk_gradients_match_oracle():

@@ -1,23 +1,32 @@
 #!/usr/bin/env python
-"""Relative-markdown-link checker (run by the CI docs job and locally).
+"""Relative-markdown link AND anchor checker (run by the CI docs job).
 
 Scans every git-tracked *.md file (rglob fallback outside a repo) for
-[text](target) links and verifies that relative targets exist on disk
-(anchors are stripped; http(s)/mailto links are skipped — CI must not
-depend on the network).
+[text](target) links and verifies that
+
+* relative targets exist on disk, and
+* `#anchor` fragments — both same-file (`#heading`) and cross-file
+  (`other.md#heading`) — match a real heading in the target markdown
+  file, using GitHub's heading-slug rules (lowercase, punctuation
+  stripped, spaces -> hyphens, duplicate slugs suffixed -1, -2, ...).
+
+http(s)/mailto links are skipped — CI must not depend on the network.
 
 Usage:  python tools/check_links.py [root]
 Exits non-zero listing every broken link as file:line -> target.
 """
 from __future__ import annotations
 
+import functools
 import pathlib
 import re
 import subprocess
 import sys
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
 SKIP_DIRS = {".git", "results", "__pycache__", ".pytest_cache"}
 
 
@@ -43,6 +52,42 @@ def iter_md_files(root: pathlib.Path):
             yield p
 
 
+def slugify(heading: str) -> str:
+    """GitHub's markdown heading -> anchor id (gfm anchors: lowercase, drop
+    everything but word chars/spaces/hyphens, spaces -> hyphens)."""
+    # strip inline markup that does not contribute to the slug (underscores
+    # are word chars — GitHub keeps them: `cfg.use_kernels` -> cfguse_kernels)
+    heading = re.sub(r"[`*]", "", heading.strip())
+    # strip trailing ATX closing hashes ("## title ##")
+    heading = re.sub(r"\s+#+\s*$", "", heading)
+    heading = heading.lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def heading_anchors(md: pathlib.Path) -> frozenset[str]:
+    """All anchor ids a markdown file exposes (code fences excluded;
+    duplicate headings get GitHub's -1, -2, ... suffixes)."""
+    anchors: list[str] = []
+    seen: dict[str, int] = {}
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.append(slug if n == 0 else f"{slug}-{n}")
+    return frozenset(anchors)
+
+
 def check_file(md: pathlib.Path) -> list[str]:
     errors = []
     for lineno, line in enumerate(md.read_text().splitlines(), 1):
@@ -50,12 +95,21 @@ def check_file(md: pathlib.Path) -> list[str]:
             target = m.group(1)
             if target.startswith(SKIP_PREFIXES):
                 continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            resolved = (md.parent / path).resolve()
-            if not resolved.exists():
-                errors.append(f"{md}:{lineno} -> {target}")
+            path, _, anchor = target.partition("#")
+            if path:
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md}:{lineno} -> {target}")
+                    continue
+            else:
+                resolved = md  # pure "#anchor" self-link
+            if anchor and resolved.suffix == ".md" and resolved.is_file():
+                # case-sensitive: GitHub anchor ids are lowercase slugs and
+                # fragment matching in browsers is case-sensitive, so
+                # #Dispatch is broken even when #dispatch exists
+                if anchor not in heading_anchors(resolved):
+                    errors.append(f"{md}:{lineno} -> {target} "
+                                  f"(no heading #{anchor})")
     return errors
 
 
@@ -67,11 +121,12 @@ def main(argv: list[str]) -> int:
         n += 1
         errors.extend(check_file(md))
     if errors:
-        print(f"[check_links] {len(errors)} broken relative link(s):")
+        print(f"[check_links] {len(errors)} broken relative link(s)/anchor(s):")
         for e in errors:
             print(f"  {e}")
         return 1
-    print(f"[check_links] OK — {n} markdown files, no broken relative links")
+    print(f"[check_links] OK — {n} markdown files, no broken relative "
+          f"links or anchors")
     return 0
 
 
