@@ -13,13 +13,14 @@ from typing import Sequence
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.graph import datasets
-from repro.graph.events import EventStream
+from repro.graph.events import EventStream, stack_batches
 from repro.models import mdgnn
 from repro.models.mdgnn import MDGNNConfig
 from repro.optim import optimizers
-from repro.train import loop, pipeline
+from repro.train import loop, pipeline, scan
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -39,6 +40,22 @@ class RunResult:
     epoch_seconds: list
     compile_seconds: float
     per_batch_aps: list
+    # host->device step dispatches per epoch: K-1 for the per-batch loops,
+    # ceil((K-1)/scan_chunk) for the scan-compiled engine — the denominator
+    # of the wall-clock-per-dispatch column every fig reports
+    dispatches_per_epoch: int = 0
+
+
+def ms_per_dispatch(epoch_seconds: float, dispatches: int) -> float:
+    """Wall-clock per host->device dispatch (ms) — reported alongside
+    events/sec by every fig so dispatch-bound regimes are visible."""
+    return epoch_seconds / max(dispatches, 1) * 1e3
+
+
+def _copy_tree(tree):
+    """Deep device copy — warm-up calls donate their opt/model state, so
+    they must run on copies to keep the real training buffers alive."""
+    return jax.tree.map(jnp.copy, tree)
 
 
 def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
@@ -47,24 +64,26 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
               use_smoothing=None, collect_per_batch=False,
               d_mem=32, n_layers=1, n_heads=2,
               use_kernels=False, pipeline_depth=0,
-              host_prefetch=False) -> RunResult:
+              host_prefetch=False, scan_chunk=1) -> RunResult:
     cfg = MDGNNConfig(
         variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
         n_layers=n_layers, n_heads=n_heads, use_kernels=use_kernels,
         use_pres=use_pres, use_smoothing=use_smoothing, beta=beta,
         pres_scale=pres_scale, delta_mode=delta_mode,
-        pipeline_depth=pipeline_depth)
+        pipeline_depth=pipeline_depth, scan_chunk=scan_chunk)
     key = jax.random.PRNGKey(seed)
     params, _ = mdgnn.init_params(key, cfg)
     state = mdgnn.init_state(cfg)
     opt = optimizers.adamw(1e-3)
     opt_state = opt.init(params)
-    # pipeline facade: depth 0 delegates to the sequential loop (bit-exact);
-    # host_prefetch re-carves batches lazily each epoch on a background
-    # thread instead of materialising the full list up front (fig_pipeline
-    # measures exactly that difference)
-    step = pipeline.make_train_step(cfg, opt)
+    # schedule routing: scan_chunk > 1 -> scan-compiled macro-batch engine;
+    # otherwise the pipeline facade (depth 0 delegates to the sequential
+    # loop, bit-exact). host_prefetch re-carves batches lazily each epoch
+    # on a background thread instead of materialising the full list up
+    # front (fig_pipeline measures exactly that difference)
+    engine = scan.ScanEngine(cfg, opt) if scan_chunk > 1 else None
+    step = None if engine else pipeline.make_train_step(cfg, opt)
     if host_prefetch:
         make_batches = lambda: stream.prefetch_batches(
             batch_size, depth=max(2, pipeline_depth))
@@ -75,30 +94,49 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
         make_batches = lambda: batches
         warm = (batches[0], batches[1])
     dst_range = (spec.n_users, spec.n_users + spec.n_items)
+    n_steps = stream.num_batches(batch_size) - 1
+    dispatches = -(-n_steps // scan_chunk) if scan_chunk > 1 else n_steps
 
-    # compile (first step) timed separately so epoch_seconds is steady-state
+    # compile (first step) timed separately so epoch_seconds is steady-state;
+    # the steps donate their opt/model state, so warm-up runs on copies
     t0 = time.perf_counter()
     from repro.graph.negatives import sample_negatives
     neg = sample_negatives(key, warm[1], *dst_range)
-    if pipeline_depth:
+    if engine is not None:
+        # a full-chunk macro when the stream has one (the tail-size compile
+        # lands in epoch 0, which the figs drop as warm-up)
+        warm_list = (batches[:scan_chunk + 1] if not host_prefetch
+                     else list(warm))
+        engine._macro_step(tuple(dst_range))(
+            _copy_tree(params), _copy_tree(opt_state), _copy_tree(state),
+            key, stack_batches(warm_list))
+    elif pipeline_depth:
         pstate = pipeline.PipelineState.init(state["memory"])
-        step(params, opt_state, state, pstate, warm[0], warm[1], neg)
+        step(_copy_tree(params), _copy_tree(opt_state), _copy_tree(state),
+             pstate, warm[0], warm[1], neg)
     else:
-        step(params, opt_state, state, warm[0], warm[1], neg)
+        step(_copy_tree(params), _copy_tree(opt_state), _copy_tree(state),
+             warm[0], warm[1], neg)
     compile_s = time.perf_counter() - t0
 
     aps, losses, secs, per_batch = [], [], [], []
     for _ in range(epochs):
         key, sub = jax.random.split(key)
-        params, opt_state, state, res = pipeline.run_epoch(
-            params, opt_state, state, make_batches(), cfg, step, sub,
-            dst_range, collect_logits=collect_per_batch)
+        if engine is not None:
+            params, opt_state, state, res = engine.run_epoch(
+                params, opt_state, state, make_batches(), sub, dst_range,
+                collect_logits=collect_per_batch)
+        else:
+            params, opt_state, state, res = pipeline.run_epoch(
+                params, opt_state, state, make_batches(), cfg, step, sub,
+                dst_range, collect_logits=collect_per_batch)
         aps.append(res.ap)
         losses.append(res.loss)
         secs.append(res.seconds)
         if collect_per_batch:
             per_batch.extend(res.aps)
-    return RunResult(aps, losses, secs, compile_s, per_batch)
+    return RunResult(aps, losses, secs, compile_s, per_batch,
+                     dispatches_per_epoch=dispatches)
 
 
 def emit(name: str, rows: Sequence[dict]):

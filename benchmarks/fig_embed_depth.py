@@ -42,6 +42,8 @@ def run(fast: bool = False, seeds: int | None = None):
                     "batch_size": batch_size,
                     "kernels": int(use_kernels),
                     "events_per_sec": (len(stream) / sec) if sec > 0 else 0.0,
+                    "ms_per_dispatch": common.ms_per_dispatch(
+                        sec, res.dispatches_per_epoch),
                     "epoch_seconds": sec,
                     "compile_seconds": float(np.mean(comps)),
                     "final_ap": float(np.mean(aps)),

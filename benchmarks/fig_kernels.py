@@ -58,8 +58,9 @@ def _memory_path_inputs(rng, m, d):
 
 _COLS = ("kind", "kernel", "shape", "oracle_us", "kernel_max_err",
          "composed_oracle_us", "fused_oracle_us", "oracle_fusion_gain",
-         "events_per_sec", "epoch_seconds", "compile_seconds", "ap_final",
-         "loss_final", "ap_delta", "loss_delta")
+         "events_per_sec", "ms_per_dispatch", "epoch_seconds",
+         "compile_seconds", "ap_final", "loss_final", "ap_delta",
+         "loss_delta")
 
 
 def _row(**kw):
@@ -112,6 +113,8 @@ def run(fast: bool = False, seeds: int = 1):
         rows.append(_row(kind="e2e", kernel="all" if use_kernels else "none",
                          shape=f"{n_events}ev",
                          events_per_sec=n_events / sec, epoch_seconds=sec,
+                         ms_per_dispatch=common.ms_per_dispatch(
+                             sec, res.dispatches_per_epoch),
                          compile_seconds=res.compile_seconds,
                          ap_final=res.aps[-1], loss_final=res.losses[-1]))
     # interpret-mode contract: the kernel path is the same computation

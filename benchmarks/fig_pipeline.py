@@ -32,6 +32,8 @@ def run(fast: bool = False, seeds: int | None = None):
             "schedule": "sequential" if depth == 0 else f"pipelined(K={depth})",
             "pipeline_depth": depth,
             "events_per_sec": n_events / sec,
+            "ms_per_dispatch": common.ms_per_dispatch(
+                sec, res.dispatches_per_epoch),
             "epoch_seconds": sec,
             "compile_seconds": res.compile_seconds,
             "ap_final": res.aps[-1],

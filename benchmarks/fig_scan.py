@@ -1,0 +1,94 @@
+"""Scan-compiled macro-batch sweep (docs/SCAN.md §Measured).
+
+Events/sec, wall-clock-per-dispatch and AP for scan_chunk ∈ {1, 4, 16, 64}
+crossed with the Pallas-kernel routing on/off. chunk=1 IS the sequential
+baseline (the engine delegates to the historical loop, bit-exact); larger
+chunks run T lag-one steps per jax.lax.scan dispatch with in-step negative
+sampling and donated carry, so the per-batch dispatch + host-sync tax is
+amortized by T. The sweep uses a deliberately small temporal batch — the
+dispatch-bound regime the paper's Fig. 3/5 care about — so the speed-up
+column is the dispatch tax made visible.
+
+On this CPU container the kernel rows run in interpret mode (plumbing, not
+Mosaic perf): the interesting numbers are the chunk scaling on the
+reference path and the parity columns.
+
+`--tiny` is the CI bench-smoke mode: a seconds-scale run that ASSERTS
+scan-vs-sequential and kernels-on/off parity (loss/AP drift) instead of
+chasing throughput numbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+CHUNKS = (1, 4, 16, 64)
+
+
+def run(fast: bool = False, seeds: int | None = None, tiny: bool = False):
+    n_events = 1200 if tiny else (3000 if fast else 6000)
+    epochs = 2 if tiny else 3
+    batch_size = 50              # small-batch regime: dispatch tax dominates
+    chunks = (1, 8) if tiny else CHUNKS
+    stream, spec = common.bench_stream(n_events=n_events)
+    rows = []
+    for use_kernels in (False, True):
+        base = None
+        for chunk in chunks:
+            res = common.train_run(
+                stream, spec, variant="tgn", use_pres=True,
+                batch_size=batch_size, epochs=epochs, d_mem=32,
+                use_kernels=use_kernels, scan_chunk=chunk)
+            # steady state: epoch 0 absorbs tail-size compiles + warm caches
+            steady = res.epoch_seconds[1:] or res.epoch_seconds
+            sec, _ = common.mean_std(steady)
+            row = {
+                "scan_chunk": chunk,
+                "kernels": int(use_kernels),
+                "events_per_sec": n_events / sec,
+                "epoch_seconds": sec,
+                "dispatches_per_epoch": res.dispatches_per_epoch,
+                "ms_per_dispatch": common.ms_per_dispatch(
+                    sec, res.dispatches_per_epoch),
+                "compile_seconds": res.compile_seconds,
+                "ap_final": res.aps[-1],
+                "loss_final": res.losses[-1],
+            }
+            if base is None:
+                base = row
+            row["speedup_vs_chunk1"] = (row["events_per_sec"]
+                                        / base["events_per_sec"])
+            rows.append(row)
+        if tiny:
+            # CI parity gate: the scanned epochs must match the sequential
+            # ones numerically (same negatives, same body — any drift here
+            # is a scan-carry or donation bug, not noise)
+            seq, scn = rows[-len(chunks)], rows[-1]
+            assert abs(seq["loss_final"] - scn["loss_final"]) < 1e-3, (
+                f"scan parity drift (kernels={use_kernels}): "
+                f"loss {seq['loss_final']} vs {scn['loss_final']}")
+            assert abs(seq["ap_final"] - scn["ap_final"]) < 5e-3, (
+                f"scan parity drift (kernels={use_kernels}): "
+                f"AP {seq['ap_final']} vs {scn['ap_final']}")
+    if tiny:
+        # kernels on/off parity at every chunk (interpret mode = same math)
+        for off, on in zip(rows[:len(chunks)], rows[len(chunks):]):
+            assert abs(off["loss_final"] - on["loss_final"]) < 1e-3, (
+                f"kernel parity drift at chunk={off['scan_chunk']}: "
+                f"loss {off['loss_final']} vs {on['loss_final']}")
+        print("[fig_scan --tiny] scan + kernel parity OK")
+        return rows
+    common.emit("fig_scan", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI bench-smoke: seconds-scale run that asserts "
+                         "scan/kernel parity instead of measuring throughput")
+    args = ap.parse_args()
+    run(fast=args.fast, tiny=args.tiny)

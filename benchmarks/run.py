@@ -15,6 +15,8 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
                                the sequential baseline (docs/PIPELINE.md)
   fig_kernels      (kernels)   memory-update path per-kernel timings +
                                end-to-end use_kernels on/off (docs/KERNELS.md)
+  fig_scan         (engine)    events/sec + ms/dispatch: scan_chunk
+                               {1,4,16,64} x kernels (docs/SCAN.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   roofline         §Roofline   dry-run roofline table consolidation
 
@@ -40,6 +42,7 @@ BENCHES = [
     "fig_embed_depth",
     "fig_pipeline",
     "fig_kernels",
+    "fig_scan",
     "kernels_micro",
     "roofline",
 ]

@@ -11,8 +11,15 @@ import jax.numpy as jnp
 from repro.graph.events import EventBatch
 
 
-def sample_negatives(key, batch: EventBatch, dst_lo: int, dst_hi: int,
-                     num: int | None = None) -> EventBatch:
+def sample_negatives_in(key, batch: EventBatch, dst_lo, dst_hi,
+                        num: int | None = None) -> EventBatch:
+    """In-step (jit/scan-safe) negative sampling.
+
+    Every op here is traceable, so the scan-compiled engine
+    (repro.train.scan) runs it INSIDE the compiled step, driven by a PRNG
+    key carried through the scan — no host-side key split or device
+    transfer per temporal batch. `num` must be static under jit (shapes);
+    the dst bounds may be python ints or traced scalars."""
     n = num or batch.size
     idx = jax.random.randint(key, (n,), 0, batch.size)
     neg_dst = jax.random.randint(key, (n,), dst_lo, dst_hi)
@@ -23,3 +30,11 @@ def sample_negatives(key, batch: EventBatch, dst_lo: int, dst_hi: int,
         feat=jnp.zeros((n, batch.feat.shape[1]), batch.feat.dtype),
         mask=batch.mask[idx],
     )
+
+
+def sample_negatives(key, batch: EventBatch, dst_lo: int, dst_hi: int,
+                     num: int | None = None) -> EventBatch:
+    """Host-loop entry point; identical sampling to `sample_negatives_in`
+    (the scan engine at chunk=1 must reproduce the sequential loop's
+    negatives bit for bit)."""
+    return sample_negatives_in(key, batch, dst_lo, dst_hi, num=num)

@@ -19,7 +19,7 @@ from repro.graph import datasets
 from repro.graph.datasets import SPECS
 from repro.models.mdgnn import MDGNNConfig, init_params, init_state
 from repro.optim import adamw
-from repro.train import loop, pipeline
+from repro.train import loop, pipeline, scan
 from repro.checkpoint import save_checkpoint
 
 
@@ -55,6 +55,13 @@ def main(argv=None):
                          "stage reads a memory snapshot at most K batch-"
                          "writes stale, PRES-predict-filled (docs/PIPELINE.md)"
                          "; 0 = strictly sequential Alg. 1/2")
+    ap.add_argument("--scan-chunk", type=int, default=1,
+                    help="scan-compiled macro-batch training (docs/SCAN.md): "
+                         "T consecutive lag-one steps run under ONE "
+                         "jax.lax.scan dispatch with in-step negative "
+                         "sampling and donated state; 1 = the sequential "
+                         "per-batch loop (bit-exact). Mutually exclusive "
+                         "with --pipeline-depth >= 1")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -76,7 +83,7 @@ def main(argv=None):
         n_layers=args.n_layers, n_heads=args.n_heads,
         use_pres=args.pres, beta=args.beta, delta_mode=args.delta_mode,
         pres_scale=args.pres_scale, use_kernels=args.use_kernels,
-        pipeline_depth=args.pipeline_depth)
+        pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
     state = init_state(cfg)
@@ -87,15 +94,19 @@ def main(argv=None):
     # inside make_train_step / embed_nodes;
     # cfg.pipeline_depth routes through the staleness-aware pipelined
     # schedule (repro.train.pipeline — depth 0 delegates to the sequential
-    # loop, bit-exact)
-    train_step = pipeline.make_train_step(cfg, opt)
+    # loop, bit-exact);
+    # cfg.scan_chunk > 1 routes through the scan-compiled macro-batch
+    # engine (repro.train.scan — chunk 1 delegates likewise). The two are
+    # mutually exclusive (scan.check_schedule raises early).
+    engine = scan.ScanEngine(cfg, opt) if cfg.scan_chunk > 1 else None
+    train_step = None if engine else pipeline.make_train_step(cfg, opt)
     eval_step = loop.make_eval_step(cfg)
 
     n_batches = train_s.num_batches(args.batch_size)
     depth = cfg.pipeline_depth
-    # depth 0 trains from the materialised list (the historical path);
-    # depth >= 1 re-carves batches lazily each epoch with host prefetch,
-    # overlapping batch prep with device compute
+    # depth 0 / scan trains from the materialised list (the historical
+    # path); depth >= 1 re-carves batches lazily each epoch with host
+    # prefetch, overlapping batch prep with device compute
     if depth:
         make_batches = lambda: train_s.prefetch_batches(
             args.batch_size, depth=max(2, depth))
@@ -107,12 +118,17 @@ def main(argv=None):
     print(f"[train] {args.model}{'-PRES' if args.pres else ''} on "
           f"{args.dataset}: {len(train_s)} events, K={n_batches} batches "
           f"of b={args.batch_size}"
-          + (f", pipeline_depth={depth}" if depth else ""))
+          + (f", pipeline_depth={depth}" if depth else "")
+          + (f", scan_chunk={cfg.scan_chunk}" if cfg.scan_chunk > 1 else ""))
     for epoch in range(args.epochs):
         key, sub = jax.random.split(key)
-        params, opt_state, state, res = pipeline.run_epoch(
-            params, opt_state, state, make_batches(), cfg, train_step, sub,
-            dst_range)
+        if engine is not None:
+            params, opt_state, state, res = engine.run_epoch(
+                params, opt_state, state, make_batches(), sub, dst_range)
+        else:
+            params, opt_state, state, res = pipeline.run_epoch(
+                params, opt_state, state, make_batches(), cfg, train_step,
+                sub, dst_range)
         key, sub = jax.random.split(key)
         vstate, vap, vauc = loop.evaluate(params, state, val_batches, cfg,
                                           eval_step, sub, dst_range)

@@ -74,6 +74,12 @@ class MDGNNConfig:
     # stale, with PRES Eq. 7 extrapolation filling the in-flight rows.
     # 0 = strictly sequential Alg. 1/2 (bit-exact with the historical loop).
     pipeline_depth: int = 0
+    # Scan-compiled macro-batch training (docs/SCAN.md): T consecutive
+    # lag-one steps run device-resident under one jax.lax.scan dispatch,
+    # negatives sampled in-step, metrics stacked on device. 1 = the
+    # sequential per-batch loop (bit-exact). Mutually exclusive with
+    # pipeline_depth >= 1 for now (repro.train.scan raises).
+    scan_chunk: int = 1
 
 
 # ---------------------------------------------------------------------------

@@ -46,6 +46,26 @@ def event_batch_sharding(mesh, rules) -> EventBatch:
                       feat=NamedSharding(mesh, ev2), mask=s1)
 
 
+def macro_batch_struct(n_stacked: int, batch_size: int,
+                       d_edge: int) -> EventBatch:
+    """Abstract stacked macro-batch: `n_stacked` consecutive temporal
+    batches along a leading scan axis (docs/SCAN.md §Macro-batches)."""
+    base = EventBatch.struct(batch_size, d_edge)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_stacked,) + s.shape, s.dtype), base)
+
+
+def macro_batch_sharding(mesh, rules) -> EventBatch:
+    """Stacked batches shard like per-batch events, one axis deeper: the
+    scan (time) axis is unsharded, the event axis is axis 1."""
+    ev = module_lib.logical_to_spec((None, "event"), rules, mesh.axis_names)
+    ev2 = module_lib.logical_to_spec((None, "event", None), rules,
+                                     mesh.axis_names)
+    s1 = NamedSharding(mesh, ev)
+    return EventBatch(src=s1, dst=s1, t=s1,
+                      feat=NamedSharding(mesh, ev2), mask=s1)
+
+
 def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
                           rules=None, strategy: str = "gspmd"):
     """LoweredSpec-compatible bundle for the dry-run.
@@ -67,8 +87,19 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
     embed stage's reads hit the local snapshot shard — the live-table
     scatter collectives overlap with the next step's embedding compute
     instead of serialising before it (docs/PIPELINE.md §Distributed).
+
+    With cfg.scan_chunk > 1 the spec carries the scan-compiled macro step
+    (repro.train.scan, docs/SCAN.md §Distributed): one dispatch runs
+    scan_chunk lag-one steps over a stacked (T+1, b, ...) macro-batch with
+    the PRNG key in the carry; the donated carry keeps the node-sharded
+    memory/tracker/ring tables resident on their shards for the whole
+    macro-batch. Every spec variant donates the opt-state and model-state
+    arguments.
     """
     from repro.launch.specs import LoweredSpec
+    from repro.train import scan as scan_lib
+
+    scan_lib.check_schedule(cfg)  # scan_chunk/pipeline_depth exclusivity
 
     if strategy == "compact_update" and rules is None:
         rules = dict(module_lib.RULE_SETS["mdgnn_replicated"])
@@ -95,10 +126,25 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
     b_shard = event_batch_sharding(mesh, rules)
 
     pipelined = cfg.pipeline_depth >= 1
+    scanned = cfg.scan_chunk > 1
     train_step_fn = _make_raw_train_step(cfg, opt, mesh=mesh,
                                          strategy=strategy, rules=rules,
-                                         pipelined=pipelined)
+                                         pipelined=pipelined,
+                                         scanned=scanned)
     batch = event_batch_struct(batch_size, cfg.d_edge)
+
+    if scanned:
+        key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        macro = macro_batch_struct(cfg.scan_chunk + 1, batch_size, cfg.d_edge)
+        m_shard = macro_batch_sharding(mesh, rules)
+        repl = NamedSharding(mesh, P())
+        return LoweredSpec(
+            fn=train_step_fn,
+            args=(param_shapes, opt_shapes, state_shapes, key_struct, macro),
+            in_shardings=(p_shard, o_shard, s_shard, repl, m_shard),
+            out_shardings=(p_shard, o_shard, s_shard, repl, repl),
+            donate_argnums=(1, 2),      # opt state + model state stay resident
+        )
 
     if pipelined:
         from repro.train import pipeline as pipeline_lib
@@ -123,15 +169,18 @@ def make_mdgnn_train_spec(cfg: MDGNNConfig, batch_size: int, mesh,
         args=(param_shapes, opt_shapes, state_shapes, batch, batch, batch),
         in_shardings=(p_shard, o_shard, s_shard, b_shard, b_shard, b_shard),
         out_shardings=(p_shard, o_shard, s_shard, NamedSharding(mesh, P())),
+        donate_argnums=(1, 2),          # opt state + model state
     )
 
 
 def _make_raw_train_step(cfg: MDGNNConfig, opt, mesh=None,
                          strategy: str = "gspmd", rules=None,
-                         pipelined: bool = False):
+                         pipelined: bool = False, scanned: bool = False):
     """Un-jitted train step (the dry-run jits it with explicit shardings).
     With pipelined=True the step carries the extra PipelineState argument
-    and re-uses the staleness-aware body from repro.train.pipeline."""
+    and re-uses the staleness-aware body from repro.train.pipeline; with
+    scanned=True it is the scan-compiled macro step over a stacked
+    (T+1, b, ...) macro-batch (repro.train.scan)."""
     from repro.train import annotate
 
     replicated = (NamedSharding(mesh, P()) if mesh is not None else None)
@@ -165,7 +214,7 @@ def _make_raw_train_step(cfg: MDGNNConfig, opt, mesh=None,
 
     def train_step(params, opt_state, state, prev_batch, pos, neg):
         # re-use the single-host step body without its jax.jit wrapper
-        fn = loop_lib.make_train_step(cfg, opt).__wrapped__
+        fn = loop_lib.make_step_body(cfg, opt)
         return _run_hooked(fn, (params, opt_state, state,
                                 prev_batch, pos, neg))
 
@@ -176,4 +225,16 @@ def _make_raw_train_step(cfg: MDGNNConfig, opt, mesh=None,
         return _run_hooked(fn, (params, opt_state, state, pstate,
                                 prev_batch, pos, neg))
 
+    def scanned_train_step(params, opt_state, state, key, macro):
+        from repro.train import scan as scan_lib
+        # the whole-macro step without its jit wrapper; dst bounds are the
+        # full node range (the dry-run compiles structure, not data)
+        fn = scan_lib.make_macro_step(cfg, opt,
+                                      (0, cfg.n_nodes)).__wrapped__
+        out = _run_hooked(fn, (params, opt_state, state, key, macro))
+        # stacked (T,) losses -> one scalar (specs report a scalar loss)
+        return out[:-1] + (jnp.mean(out[-1]),)
+
+    if scanned:
+        return scanned_train_step
     return pipelined_train_step if pipelined else train_step

@@ -200,17 +200,15 @@ def maintain_state(cfg: MDGNNConfig, params, state2, aux,
     return state2
 
 
-def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
-    """Returns a jitted train_step closure.
+def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
+    """Un-jitted train-step body, shared by every trainer that runs the
+    lag-one recurrence: the sequential jitted step below, the scan-compiled
+    macro-batch engine (repro.train.scan runs this exact body under
+    jax.lax.scan), and the distributed specs (repro.train.distributed
+    traces it with the annotate hooks installed).
 
-    cfg.use_kernels routes the FULL memory-maintenance path plus the
-    embedding attention through the registered Pallas kernels
-    (docs/KERNELS.md): under PRES+GRU the whole update fuses into the
-    "memory_update" kernel; otherwise the memory cell ("gru_cell", resolved
-    by modules.kernel_memory_cell) and the PRES filter ("pres_filter")
-    route separately, and the neighbour attention resolves inside
-    embed_nodes (docs/DESIGN.md §Embedding stack). Pass gru_fn explicitly
-    to override the memory cell only."""
+    Signature: (params, opt_state, state, prev_batch, pos, neg)
+            -> (params, opt_state, state, metrics)."""
     if gru_fn is None:
         gru_fn = modules.kernel_memory_cell(cfg)
 
@@ -249,7 +247,28 @@ def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
                    "logit_p": aux["logit_p"], "logit_n": aux["logit_n"]}
         return params, opt_state, state2, metrics
 
-    return jax.jit(train_step)
+    return train_step
+
+
+def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
+    """Returns a jitted train_step closure.
+
+    cfg.use_kernels routes the FULL memory-maintenance path plus the
+    embedding attention through the registered Pallas kernels
+    (docs/KERNELS.md): under PRES+GRU the whole update fuses into the
+    "memory_update" kernel; otherwise the memory cell ("gru_cell", resolved
+    by modules.kernel_memory_cell) and the PRES filter ("pres_filter")
+    route separately, and the neighbour attention resolves inside
+    embed_nodes (docs/DESIGN.md §Embedding stack). Pass gru_fn explicitly
+    to override the memory cell only.
+
+    The optimizer state and the model state (memory table, neighbour ring
+    buffers, PRES trackers, APAN mailbox) are DONATED: XLA aliases the
+    (N, D) buffers in place instead of allocating a fresh table per step
+    (docs/SCAN.md §Donation). Callers must not reuse the opt_state/state
+    they passed in — only the returned ones."""
+    return jax.jit(make_step_body(cfg, opt, gru_fn=gru_fn),
+                   donate_argnums=(1, 2))
 
 
 def make_eval_step(cfg: MDGNNConfig):
@@ -282,17 +301,33 @@ class EpochResult:
 
 def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
               train_step, key, dst_range, collect_logits=False):
-    """One training epoch over the temporal batches (lag-one)."""
+    """One training epoch over the temporal batches (lag-one).
+
+    `batches` may be a materialized list OR a lazy/prefetching iterator
+    (`EventStream.prefetch_batches`) — the driver consumes it pairwise.
+    Loss scalars stay on device until epoch end (no per-step `float(...)`
+    sync); logits are pulled to numpy as they arrive so device memory stays
+    bounded at one step's worth."""
     t0 = time.perf_counter()
     losses, pos_all, neg_all = [], [], []
-    for i in range(1, len(batches)):
-        key, sub = jax.random.split(key)
-        neg = sample_negatives(sub, batches[i], *dst_range)
-        params, opt_state, state, m = train_step(params, opt_state, state,
-                                                 batches[i - 1], batches[i], neg)
-        losses.append(float(m["loss"]))
-        pos_all.append(np.asarray(m["logit_p"]))
-        neg_all.append(np.asarray(m["logit_n"]))
+    it = iter(batches)
+    try:
+        prev_batch = next(it)
+        for batch in it:
+            key, sub = jax.random.split(key)
+            neg = sample_negatives(sub, batch, *dst_range)
+            params, opt_state, state, m = train_step(params, opt_state, state,
+                                                     prev_batch, batch, neg)
+            losses.append(m["loss"])                   # device scalar
+            pos_all.append(np.asarray(m["logit_p"]))
+            neg_all.append(np.asarray(m["logit_n"]))
+            prev_batch = batch
+    finally:
+        # stop a PrefetchIterator's producer thread if the epoch aborts
+        close = getattr(it, "close", None)
+        if close is not None:
+            close()
+    losses = [float(x) for x in losses]                # one host sync
     ap = metrics_lib.average_precision(np.concatenate(pos_all),
                                        np.concatenate(neg_all))
     aps = [metrics_lib.average_precision(p, n) for p, n in zip(pos_all, neg_all)] \
@@ -302,13 +337,22 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
 
 
 def evaluate(params, state, batches, cfg: MDGNNConfig, eval_step, key, dst_range):
+    """Evaluation pass; `batches` may be a list or a (prefetching) iterator."""
     pos_all, neg_all = [], []
-    for i in range(1, len(batches)):
-        key, sub = jax.random.split(key)
-        neg = sample_negatives(sub, batches[i], *dst_range)
-        state, lp, ln = eval_step(params, state, batches[i - 1], batches[i], neg)
-        pos_all.append(np.asarray(lp))
-        neg_all.append(np.asarray(ln))
+    it = iter(batches)
+    try:
+        prev_batch = next(it)
+        for batch in it:
+            key, sub = jax.random.split(key)
+            neg = sample_negatives(sub, batch, *dst_range)
+            state, lp, ln = eval_step(params, state, prev_batch, batch, neg)
+            pos_all.append(np.asarray(lp))
+            neg_all.append(np.asarray(ln))
+            prev_batch = batch
+    finally:
+        close = getattr(it, "close", None)
+        if close is not None:
+            close()
     ap = metrics_lib.average_precision(np.concatenate(pos_all),
                                        np.concatenate(neg_all))
     auc = metrics_lib.roc_auc(np.concatenate(pos_all), np.concatenate(neg_all))

@@ -64,9 +64,11 @@ class PipelineState:
 
     @staticmethod
     def init(mem: MemoryState) -> "PipelineState":
+        # genuine copies, not aliases: the train step donates BOTH the live
+        # state and this snapshot, and XLA refuses to donate one buffer twice
         return PipelineState(
-            read_mem=mem.mem,
-            read_last_update=mem.last_update,
+            read_mem=jnp.copy(mem.mem),
+            read_last_update=jnp.copy(mem.last_update),
             pending=jnp.zeros(mem.mem.shape[:1], jnp.float32),
             tick=jnp.zeros((), jnp.int32),
         )
@@ -126,6 +128,9 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
     if cfg.pipeline_depth < 1:
         raise ValueError("make_pipelined_train_step needs pipeline_depth >= 1"
                          " — depth 0 is loop.make_train_step")
+    if cfg.scan_chunk > 1:
+        from repro.train import scan as scan_lib
+        scan_lib.check_schedule(cfg)  # raises: mutually exclusive schedules
     use_smooth = (cfg.use_smoothing if cfg.use_smoothing is not None
                   else cfg.use_pres)
     if not (use_smooth and cfg.beta):
@@ -203,7 +208,10 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
                    "staleness": pstate.tick + 1}
         return params, opt_state, state2, pstate2, metrics
 
-    return jax.jit(train_step)
+    # donate the carry buffers (opt state, model state, snapshot) so XLA
+    # aliases the (N, D) tables in place — same contract as the sequential
+    # and scanned steps (docs/SCAN.md §Donation)
+    return jax.jit(train_step, donate_argnums=(1, 2, 3))
 
 
 def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
@@ -224,10 +232,11 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     split per step in the same order as loop.run_epoch, so negatives are
     identical across depths (the sweep compares schedules, not samples).
     Per-step metrics stay on device; the single host sync happens at epoch
-    end (the sequential loop syncs every step on float(loss))."""
+    end (the sequential loop also defers its loss syncs to epoch end, but
+    still pulls each step's logits — and the scan engine, repro.train.scan,
+    amortizes even that to once per macro-batch)."""
     if cfg.pipeline_depth == 0:
-        if not isinstance(batches, (list, tuple)):
-            batches = list(batches)
+        # loop.run_epoch consumes lists and lazy iterators alike
         return loop_lib.run_epoch(params, opt_state, state, batches, cfg,
                                   train_step, key, dst_range,
                                   collect_logits=collect_logits)

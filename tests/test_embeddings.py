@@ -300,6 +300,8 @@ def test_kernel_and_reference_losses_agree_at_depth_2():
     for uk in (False, True):
         step = loop.make_train_step(dataclasses.replace(cfg, use_kernels=uk),
                                     opt)
-        _, _, _, m = step(params, opt.init(params), state, prev, pos, neg)
+        # the step donates opt/model state — run each config on copies
+        _, _, _, m = step(params, opt.init(params),
+                          jax.tree.map(jnp.copy, state), prev, pos, neg)
         losses.append(float(m["loss"]))
     np.testing.assert_allclose(losses[0], losses[1], rtol=1e-5)

@@ -240,6 +240,8 @@ def test_kernel_routed_train_step_matches_jnp():
     outs = []
     for gru_fn in (None, kops.gru_cell_params):
         step = loop.make_train_step(cfg, opt, gru_fn=gru_fn)
-        _, _, _, m = step(params, opt.init(params), state, prev, pos, neg)
+        # the step donates opt/model state — run each routing on copies
+        _, _, _, m = step(params, opt.init(params),
+                          jax.tree.map(jnp.copy, state), prev, pos, neg)
         outs.append(float(m["loss"]))
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)

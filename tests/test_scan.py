@@ -1,0 +1,307 @@
+"""Scan-compiled macro-batch training (docs/SCAN.md): batch stacking, the
+lag-one macro-batch iterator, chunk=1 bit-exactness with the sequential
+loop, numeric parity of the scanned epoch at chunk=8 (params, memory, PRES
+trackers, neighbour ring buffers, APAN mailbox, logits), the buffer-
+donation contract of every train step, schedule exclusivity, and the
+scanned distributed spec."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.events import iter_macro_batches, stack_batches
+from repro.graph.negatives import sample_negatives
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.train import loop, pipeline, scan
+
+
+def _setup(stream, chunk, variant="tgn", use_pres=True, **kw):
+    cfg = MDGNNConfig(variant=variant, n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=8, d_msg=8, d_time=4,
+                      d_embed=8, n_neighbors=4, use_pres=use_pres,
+                      scan_chunk=chunk, **kw)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    return cfg, params, opt.init(params), state, opt
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_tree_close(a, b, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Macro-batch stacking / iteration
+# ---------------------------------------------------------------------------
+
+
+def test_stack_batches_shapes_and_values(tiny_stream):
+    batches = tiny_stream.temporal_batches(64)
+    macro = stack_batches(batches[:3])
+    assert macro.src.shape == (3, 64)
+    assert macro.feat.shape == (3, 64, tiny_stream.feat_dim)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(macro.src[i]),
+                                      np.asarray(batches[i].src))
+
+
+def test_stack_batches_rejects_empty():
+    with pytest.raises(ValueError):
+        stack_batches([])
+
+
+def test_iter_macro_batches_lag_one_overlap(tiny_stream):
+    """Consecutive macros overlap by one batch (the lag-one prev), cover
+    all K-1 steps, and the tail macro is shorter."""
+    batches = tiny_stream.temporal_batches(50)   # K = 12
+    k = len(batches)
+    chunk = 5
+    macros = list(iter_macro_batches(iter(batches), chunk))
+    assert len(macros) == -(-(k - 1) // chunk)
+    # step coverage: macro m drives (len-1) steps; total steps == K-1
+    assert sum(m.src.shape[0] - 1 for m in macros) == k - 1
+    idx = 0
+    for m in macros:
+        n = m.src.shape[0]
+        for j in range(n):
+            np.testing.assert_array_equal(np.asarray(m.src[j]),
+                                          np.asarray(batches[idx + j].src))
+        idx += n - 1   # overlap: last batch of macro m is first of m+1
+
+
+def test_iter_macro_batches_bad_chunk(tiny_stream):
+    with pytest.raises(ValueError):
+        list(iter_macro_batches(tiny_stream.temporal_batches(50), 0))
+
+
+def test_iter_macro_batches_single_batch_yields_nothing(tiny_stream):
+    batches = tiny_stream.temporal_batches(50)[:1]
+    assert list(iter_macro_batches(iter(batches), 4)) == []
+
+
+# ---------------------------------------------------------------------------
+# Parity with the sequential loop
+# ---------------------------------------------------------------------------
+
+
+def test_chunk1_bit_exact_with_sequential_loop(tiny_stream):
+    """scan_chunk=1 must be bit-exact with the historical loop: identical
+    per-epoch loss/AP and bitwise-identical parameters and state."""
+    batches = tiny_stream.temporal_batches(100)
+    dst = (50, 80)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=1)
+    step = loop.make_train_step(cfg, opt)
+    p_ref, _, s_ref, res_ref = loop.run_epoch(
+        params, opt_state, state, batches, cfg, step,
+        jax.random.PRNGKey(1), dst)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=1)
+    engine = scan.ScanEngine(cfg, opt)
+    p_s, _, s_s, res_s = engine.run_epoch(
+        params, opt_state, state, iter(batches), jax.random.PRNGKey(1), dst)
+
+    assert res_s.loss == res_ref.loss
+    assert res_s.ap == res_ref.ap
+    _assert_tree_equal(p_ref, p_s)
+    _assert_tree_equal(s_ref, s_s)
+
+
+@pytest.mark.parametrize("variant", ["tgn", "apan"])
+def test_chunk8_numeric_parity_full_state(tiny_stream, variant):
+    """The scanned epoch at chunk=8 matches the sequential loop within 1e-5
+    on params, memory table, PRES trackers, neighbour ring buffers and (for
+    APAN) the mailbox — the negatives are bit-identical by construction, so
+    any drift is carry plumbing."""
+    batches = tiny_stream.temporal_batches(50)   # 11 steps -> macro 8 + 3
+    dst = (50, 80)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=1,
+                                                variant=variant)
+    step = loop.make_train_step(cfg, opt)
+    p_ref, _, s_ref, res_ref = loop.run_epoch(
+        params, opt_state, state, batches, cfg, step,
+        jax.random.PRNGKey(1), dst)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=8,
+                                                variant=variant)
+    engine = scan.ScanEngine(cfg, opt)
+    p_s, _, s_s, res_s = engine.run_epoch(
+        params, opt_state, state, batches, jax.random.PRNGKey(1), dst)
+
+    _assert_tree_close(p_ref, p_s)
+    np.testing.assert_allclose(np.asarray(s_ref["memory"].mem),
+                               np.asarray(s_s["memory"].mem), atol=1e-5)
+    _assert_tree_close(s_ref["pres"], s_s["pres"])
+    _assert_tree_equal(s_ref["neighbors"], s_s["neighbors"])   # int exact
+    if variant == "apan":
+        _assert_tree_close(s_ref["mailbox"], s_s["mailbox"])
+    assert abs(res_s.loss - res_ref.loss) < 1e-5
+    assert abs(res_s.ap - res_ref.ap) < 1e-4
+
+
+def test_macro_step_logits_match_sequential_steps(tiny_stream):
+    """One macro step's stacked (T, b) logits equal the T sequential steps'
+    logits — the per-step metrics really are the same computation."""
+    batches = tiny_stream.temporal_batches(100)
+    dst = (50, 80)
+    t = 4
+    key = jax.random.PRNGKey(3)
+
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=t)
+    step = loop.make_train_step(cfg, opt)
+    k, ref_lp = key, []
+    p, os_, st = params, opt_state, jax.tree.map(jnp.copy, state)
+    for i in range(1, t + 1):
+        k, sub = jax.random.split(k)
+        neg = sample_negatives(sub, batches[i], *dst)
+        p, os_, st, m = step(p, os_, st, batches[i - 1], batches[i], neg)
+        ref_lp.append(np.asarray(m["logit_p"]))
+
+    macro_step = scan.make_macro_step(cfg, opt, dst)
+    cfg2, params2, opt_state2, state2, opt2 = _setup(tiny_stream, chunk=t)
+    macro = stack_batches(batches[:t + 1])
+    _, _, _, _, ms = macro_step(params2, opt_state2, state2, key, macro)
+    got = np.asarray(ms["logit_p"])
+    assert got.shape == (t, 100)
+    np.testing.assert_allclose(got, np.stack(ref_lp), atol=1e-5)
+
+
+def test_scan_with_kernels_parity(tiny_stream):
+    """Kernel routing composes with the scan: interpret-mode Pallas inside
+    the lax.scan body matches the jnp path."""
+    batches = tiny_stream.temporal_batches(100)
+    dst = (50, 80)
+    outs = []
+    for uk in (False, True):
+        cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=3,
+                                                    use_kernels=uk)
+        engine = scan.ScanEngine(cfg, opt)
+        p, _, s, res = engine.run_epoch(params, opt_state, state, batches,
+                                        jax.random.PRNGKey(1), dst)
+        outs.append((p, res.loss))
+    _assert_tree_close(outs[0][0], outs[1][0], atol=1e-4)
+    assert abs(outs[0][1] - outs[1][1]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Donation contract
+# ---------------------------------------------------------------------------
+
+
+def _donated_inputs(lowered) -> int:
+    """Count donated (input-output aliased) arguments in the lowered text."""
+    return lowered.as_text().count("tf.aliasing_output")
+
+
+def test_sequential_step_donates_state_buffers(tiny_stream):
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=1)
+    batches = tiny_stream.temporal_batches(100)
+    neg = sample_negatives(jax.random.PRNGKey(2), batches[1], 50, 80)
+    step = loop.make_train_step(cfg, opt)
+    lowered = step.lower(params, opt_state, state, batches[0], batches[1],
+                         neg)
+    # every opt-state and model-state leaf (memory table, last-update,
+    # neighbour ring buffers, PRES trackers) must be aliased in place
+    n_state = len(jax.tree.leaves(opt_state)) + len(jax.tree.leaves(state))
+    assert _donated_inputs(lowered) >= n_state
+
+
+def test_macro_step_donates_carry(tiny_stream):
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=4)
+    batches = tiny_stream.temporal_batches(100)
+    macro = stack_batches(batches[:5])
+    step = scan.make_macro_step(cfg, opt, (50, 80))
+    lowered = step.lower(params, opt_state, state, jax.random.PRNGKey(0),
+                         macro)
+    n_state = len(jax.tree.leaves(opt_state)) + len(jax.tree.leaves(state))
+    assert _donated_inputs(lowered) >= n_state
+
+
+def test_pipelined_step_donates_carry(tiny_stream):
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=1,
+                                                pipeline_depth=2)
+    batches = tiny_stream.temporal_batches(100)
+    neg = sample_negatives(jax.random.PRNGKey(2), batches[1], 50, 80)
+    pstate = pipeline.PipelineState.init(state["memory"])
+    step = pipeline.make_pipelined_train_step(cfg, opt)
+    lowered = step.lower(params, opt_state, state, pstate, batches[0],
+                         batches[1], neg)
+    n_state = (len(jax.tree.leaves(opt_state)) + len(jax.tree.leaves(state))
+               + len(jax.tree.leaves(pstate)))
+    assert _donated_inputs(lowered) >= n_state
+
+
+def test_donated_state_is_consumed(tiny_stream):
+    """The donation is real: reusing the state passed to a step must fail
+    (its buffers were aliased into the outputs)."""
+    cfg, params, opt_state, state, opt = _setup(tiny_stream, chunk=1)
+    batches = tiny_stream.temporal_batches(100)
+    neg = sample_negatives(jax.random.PRNGKey(2), batches[1], 50, 80)
+    step = loop.make_train_step(cfg, opt)
+    step(params, opt_state, state, batches[0], batches[1], neg)
+    with pytest.raises(RuntimeError, match="[Dd]eleted|donated"):
+        _ = np.asarray(state["memory"].mem) + 0
+
+
+# ---------------------------------------------------------------------------
+# Schedule exclusivity + distributed spec
+# ---------------------------------------------------------------------------
+
+
+def test_scan_and_pipeline_are_mutually_exclusive(tiny_stream):
+    cfg, _, _, _, opt = _setup(tiny_stream, chunk=4, pipeline_depth=2)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        scan.ScanEngine(cfg, opt)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        pipeline.make_pipelined_train_step(cfg, opt)
+    with pytest.raises(ValueError, match="scan_chunk"):
+        scan.ScanEngine(dataclasses.replace(cfg, pipeline_depth=0,
+                                            scan_chunk=0), opt)
+
+
+def test_scanned_distributed_spec_compiles_debug_mesh():
+    from repro.launch import mesh as mesh_lib
+    from repro.train.distributed import make_mdgnn_train_spec
+
+    cfg = MDGNNConfig(variant="tgn", n_nodes=64, d_edge=8, d_mem=16,
+                      d_msg=16, d_time=8, d_embed=16, use_pres=True,
+                      scan_chunk=4)
+    mesh = mesh_lib.make_debug_mesh(1, 1)
+    spec = make_mdgnn_train_spec(cfg, 32, mesh)
+    assert spec.donate_argnums == (1, 2)       # opt + model state donated
+    assert len(spec.args) == 5                 # params/opt/state/key/macro
+    assert spec.args[4].src.shape == (5, 32)   # stacked (T+1, b) macro
+    with mesh:
+        compiled = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                           out_shardings=spec.out_shardings,
+                           donate_argnums=spec.donate_argnums
+                           ).lower(*spec.args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # list-of-dicts on this jaxlib
+        cost = cost[0]
+    assert float(cost.get("flops", 0)) > 0
+
+
+def test_sequential_distributed_spec_donates():
+    from repro.launch import mesh as mesh_lib
+    from repro.train.distributed import make_mdgnn_train_spec
+
+    cfg = MDGNNConfig(variant="tgn", n_nodes=64, d_edge=8, d_mem=16,
+                      d_msg=16, d_time=8, d_embed=16, use_pres=True)
+    spec = make_mdgnn_train_spec(cfg, 32, mesh_lib.make_debug_mesh(1, 1))
+    assert spec.donate_argnums == (1, 2)
