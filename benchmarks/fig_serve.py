@@ -1,0 +1,166 @@
+"""Serving benchmark (docs/SERVING.md §Measured).
+
+Trains briefly on the stream's prefix, then replays the serving tail
+through a ServeEngine under the Poisson arrival-clock harness, crossed
+with the Pallas-kernel routing on/off: p50/p99 ingest+query latency,
+end-to-end events/sec and the online AP (trained vs untrained params —
+the aha the old offline driver could never show). Late/out-of-order
+delivery is exercised in a dedicated row.
+
+On this CPU container the kernel rows run in interpret mode (plumbing,
+not Mosaic perf) — the interesting columns are the latency distribution
+of the bucketed engine and the trained-vs-untrained AP gap.
+
+`--tiny` is the CI serve-smoke mode: a seconds-scale run that ASSERTS
+(1) engine ingest+query parity with the offline `loop.evaluate` scoring
+to 1e-5 on the same stream, (2) the micro-batcher's bounded compile count
+(at most one trace per bucket), and (3) trained AP beating untrained AP
+at serve time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.serve import MicroBatcher, ServeEngine, check_offline_parity, \
+    replay
+from repro.train import loop
+
+
+def _make_cfg(stream, use_kernels=False):
+    return MDGNNConfig(
+        variant="tgn", n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
+        d_mem=32, d_msg=32, d_time=16, d_embed=32, n_neighbors=8,
+        use_pres=True, use_kernels=use_kernels)
+
+
+def _train(cfg, stream, dst_range, epochs, batch_size=200, seed=0):
+    """Brief offline training on the prefix; returns (params, state)."""
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(seed), cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    opt_state = opt.init(params)
+    step = loop.make_train_step(cfg, opt)
+    key = jax.random.PRNGKey(seed + 1)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, _ = loop.run_epoch(
+            params, opt_state, state,
+            stream.iter_temporal_batches(batch_size), cfg, step, sub,
+            dst_range)
+    return params, state
+
+
+def _engine(cfg, params, state, stream, dst_range, track=True):
+    return ServeEngine(cfg, params, jax.tree.map(jnp.copy, state),
+                       track_deltas=track,
+                       batcher=MicroBatcher(d_edge=stream.feat_dim),
+                       item_range=dst_range)
+
+
+def _parity_gate(cfg, params, state, serve_s, dst_range):
+    """Engine ingest+query vs the offline loop.evaluate scoring (1e-5) +
+    the bounded-compile contract — the shared checker in
+    repro.serve.parity, asserted at the acceptance bounds."""
+    max_diff, n_scored, eng = check_offline_parity(
+        cfg, params, state, serve_s, dst_range,
+        batcher=MicroBatcher(d_edge=serve_s.feat_dim))
+    assert max_diff < 1e-5, (
+        f"serve/evaluate parity drift: max |Δscore| = {max_diff} over "
+        f"{n_scored} scored pairs (kernels={cfg.use_kernels})")
+    per_bucket = [c for _, c in eng.trace_counts.items()]
+    assert all(c == 1 for c in per_bucket) and \
+        len(eng.trace_counts) <= 2 * len(eng.batcher.buckets), (
+        f"micro-batcher compile bound violated: {dict(eng.trace_counts)}")
+    return max_diff, n_scored
+
+
+def run(fast: bool = False, seeds: int | None = None, tiny: bool = False):
+    n_events = 1500 if tiny else (3000 if fast else 6000)
+    epochs = 2 if tiny else 3
+    stream, spec = common.bench_stream(n_events=n_events)
+    train_s, serve_s = stream.train_serve_split(0.3)
+    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+
+    if tiny:
+        for use_kernels in (False, True):
+            cfg = _make_cfg(stream, use_kernels)
+            params, state = _train(cfg, train_s, dst_range, epochs)
+            max_diff, n_scored = _parity_gate(cfg, params, state, serve_s,
+                                              dst_range)
+            print(f"[fig_serve --tiny] kernels={int(use_kernels)}: parity "
+                  f"max|Δ|={max_diff:.2e} over {n_scored} pairs, compile "
+                  f"count bounded OK")
+        # trained params must beat untrained ones on the serving tail
+        cfg = _make_cfg(stream)
+        params, state = _train(cfg, train_s, dst_range, epochs)
+        kw = dict(rate=20000.0, tick=0.005, query_batch=16, seed=0)
+        trained = replay(_engine(cfg, params, state, serve_s, dst_range),
+                         serve_s, dst_range, **kw)
+        p0, _ = mdgnn.init_params(jax.random.PRNGKey(3), cfg)
+        untrained = replay(
+            _engine(cfg, p0, mdgnn.init_state(cfg), serve_s, dst_range),
+            serve_s, dst_range, **kw)
+        assert trained.online_ap > untrained.online_ap, (
+            f"trained serve AP {trained.online_ap:.4f} <= untrained "
+            f"{untrained.online_ap:.4f}")
+        print(f"[fig_serve --tiny] online AP trained={trained.online_ap:.4f}"
+              f" > untrained={untrained.online_ap:.4f} OK")
+        return []
+
+    rows = []
+    for use_kernels in (False, True):
+        cfg = _make_cfg(stream, use_kernels)
+        params, state = _train(cfg, train_s, dst_range, epochs)
+        for late in (False, True):
+            eng = _engine(cfg, params, state, serve_s, dst_range)
+            rep = replay(eng, serve_s, dst_range, rate=20000.0, tick=0.005,
+                         query_batch=32, seed=0,
+                         late_frac=0.1 if late else 0.0,
+                         max_late=50 if late else 0)
+            rows.append({
+                "kernels": int(use_kernels),
+                "late_frac": 0.1 if late else 0.0,
+                "events_per_sec": rep.events_per_sec,
+                "queries_per_sec": rep.queries_per_sec,
+                "ingest_p50_ms": rep.ingest_p50_ms,
+                "ingest_p99_ms": rep.ingest_p99_ms,
+                "query_p50_ms": rep.query_p50_ms,
+                "query_p99_ms": rep.query_p99_ms,
+                "online_ap": rep.online_ap,
+                "n_events": rep.n_events,
+                "n_ticks": rep.n_ticks,
+            })
+    # untrained baseline row — the gap the checkpoint restore buys
+    cfg = _make_cfg(stream)
+    p0, _ = mdgnn.init_params(jax.random.PRNGKey(3), cfg)
+    rep = replay(_engine(cfg, p0, mdgnn.init_state(cfg), serve_s, dst_range),
+                 serve_s, dst_range, rate=20000.0, tick=0.005,
+                 query_batch=32, seed=0)
+    rows.append({"kernels": 0, "late_frac": 0.0,
+                 "events_per_sec": rep.events_per_sec,
+                 "queries_per_sec": rep.queries_per_sec,
+                 "ingest_p50_ms": rep.ingest_p50_ms,
+                 "ingest_p99_ms": rep.ingest_p99_ms,
+                 "query_p50_ms": rep.query_p50_ms,
+                 "query_p99_ms": rep.query_p99_ms,
+                 "online_ap": rep.online_ap, "n_events": rep.n_events,
+                 "n_ticks": rep.n_ticks, "untrained": 1})
+    common.emit("fig_serve", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI serve-smoke: asserts engine/evaluate parity, "
+                         "the bounded compile count, and trained>untrained "
+                         "serve AP instead of measuring throughput")
+    args = ap.parse_args()
+    run(fast=args.fast, tiny=args.tiny)

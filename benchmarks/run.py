@@ -17,6 +17,9 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
                                end-to-end use_kernels on/off (docs/KERNELS.md)
   fig_scan         (engine)    events/sec + ms/dispatch: scan_chunk
                                {1,4,16,64} x kernels (docs/SCAN.md)
+  fig_serve        (serving)   p50/p99 ingest+query latency, events/sec,
+                               online AP: kernels x late-arrivals
+                               (docs/SERVING.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   roofline         §Roofline   dry-run roofline table consolidation
 
@@ -43,6 +46,7 @@ BENCHES = [
     "fig_pipeline",
     "fig_kernels",
     "fig_scan",
+    "fig_serve",
     "kernels_micro",
     "roofline",
 ]

@@ -35,18 +35,43 @@ def save_checkpoint(path: str, tree) -> None:
 
 
 def load_checkpoint(path: str, like_tree, shardings=None):
-    """Restore into the structure of `like_tree` (shape/dtype template)."""
+    """Restore into the structure of `like_tree` (shape/dtype template).
+
+    The manifest (treedef string + leaf count) and every leaf shape are
+    verified against the template BEFORE any device transfer, so restoring
+    a checkpoint written under a different model config — the classic
+    train-vs-serve drift — fails with a named error instead of corrupting
+    a live engine's state (docs/SERVING.md §Checkpoint). `shardings` is an
+    optional tree matching `like_tree`; leaves with a sharding are placed
+    with `jax.device_put(x, sharding)` (restore onto a different mesh),
+    the rest land on the default device."""
     with open(path, "rb") as f:
         mlen = int.from_bytes(f.read(8), "little")
-        msgpack.unpackb(f.read(mlen))  # manifest (structure check only)
+        manifest = msgpack.unpackb(f.read(mlen))
         payload = io.BytesIO(f.read())
     data = np.load(payload)
     leaves, treedef = jax.tree.flatten(like_tree)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint {path} holds {manifest['n_leaves']} leaves but the "
+            f"restore template has {len(leaves)} — was it written under a "
+            f"different model config/variant?")
+    saved_td = manifest.get("treedef")
+    if saved_td is not None and saved_td != str(treedef):
+        raise ValueError(
+            f"checkpoint {path} tree structure does not match the restore "
+            f"template (same leaf count, different nesting) — was it "
+            f"written under a different model config/variant?")
     shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
                     else [None] * len(leaves))
     out = []
     for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
         arr = data[f"leaf_{i}"]
+        if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"checkpoint {path} leaf {i} has shape {tuple(arr.shape)} "
+                f"but the restore template expects {tuple(ref.shape)} — "
+                f"config mismatch (e.g. d_mem / n_nodes / n_layers)")
         if hasattr(ref, "dtype"):
             arr = arr.astype(ref.dtype)
         out.append(jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr))

@@ -122,11 +122,17 @@ def ring_buffer_append(buffers, ptr, nodes, values, mask):
     probe = next(iter(buffers.values()))
     n, k = probe.shape[0], probe.shape[1]
     m = nodes.shape[0]
-    # rank of each occurrence within its node (in array order = time order)
-    order = jnp.argsort(jnp.where(mask, nodes, n), stable=True)
-    sorted_nodes = nodes[order]
-    start = jnp.searchsorted(sorted_nodes, jnp.arange(n + 1))
-    rank_sorted = jnp.arange(m) - start[sorted_nodes]
+    # rank of each occurrence within its node (in array order = time order);
+    # the searchsorted probe must use the MASKED keys — masked rows sort to
+    # the end by key n but their raw node ids would leave the probe array
+    # unsorted, corrupting the ranks of valid rows whenever padding is
+    # present (pad-to-bucket serving made this visible: the fold must be
+    # pad-invariant, tests/test_serve.py::test_ingest_pad_invariant)
+    keys = jnp.where(mask, nodes, n)
+    order = jnp.argsort(keys, stable=True)
+    sorted_keys = keys[order]
+    start = jnp.searchsorted(sorted_keys, jnp.arange(n + 1))
+    rank_sorted = jnp.arange(m) - start[sorted_keys]
     rank = jnp.zeros(m, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
     slot = (ptr[nodes] + rank) % k
     flat = jnp.where(mask, nodes * k + slot, n * k)

@@ -74,6 +74,26 @@ class EventStream:
         i1, i2 = int(n * train), int(n * (train + val))
         return self.slice(0, i1), self.slice(i1, i2), self.slice(i2, n)
 
+    def train_serve_split(self, serve_frac: float = 0.3):
+        """Split into an offline-training prefix and an online-serving tail.
+
+        The serving subsystem (repro.serve, docs/SERVING.md) trains on the
+        prefix, checkpoints, then replays the tail as the live event stream
+        — the last `serve_frac` of events are never seen at training time,
+        matching the deployment regime (a `serve_frac` of 0.15 makes the
+        serve segment coincide with `chronological_split`'s test split)."""
+        if not 0.0 < serve_frac < 1.0:
+            raise ValueError(f"serve_frac must be in (0, 1), got {serve_frac}")
+        cut = int(len(self) * (1.0 - serve_frac))
+        return self.slice(0, cut), self.slice(cut, len(self))
+
+    def reorder(self, perm: np.ndarray) -> "EventStream":
+        """Apply a delivery permutation (e.g. `late_arrival_order`) — event
+        timestamps keep their original model-time values, only the order the
+        events are handed to a consumer changes (out-of-order arrival)."""
+        return EventStream(self.src[perm], self.dst[perm], self.t[perm],
+                           self.feat[perm], self.num_nodes)
+
     def num_batches(self, batch_size: int) -> int:
         return -(-len(self) // batch_size)
 
@@ -232,6 +252,41 @@ def iter_macro_batches(source: Iterable, chunk: int) -> Iterator[EventBatch]:
             close()
     if len(buf) > 1:
         yield stack_batches(buf)
+
+
+def poisson_arrival_clock(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Synthetic wall-clock arrival times for `n` events: a Poisson process
+    of `rate` events/sec (i.i.d. exponential inter-arrival gaps).
+
+    The serving replay harness (repro.serve.replay, docs/SERVING.md) uses
+    this clock to decide how many events land in each service tick — the
+    event's *model* timestamp stays the stream's `t`; this is the ingestion
+    clock only."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0 events/sec, got {rate}")
+    rng = np.random.default_rng(seed)
+    return rng.exponential(1.0 / rate, n).cumsum()
+
+
+def late_arrival_order(n: int, frac: float, max_late: int,
+                       seed: int = 0) -> np.ndarray:
+    """Delivery permutation with bounded out-of-order arrivals: a `frac`
+    subset of events is delayed by up to `max_late` positions (never more,
+    so staleness stays bounded — the regime PRES's predict-correct filter
+    bridges at serve time, docs/SERVING.md §Late arrivals).
+
+    Returns indices into the chronological stream in delivery order."""
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"late fraction must be in [0, 1], got {frac}")
+    if max_late < 0:
+        raise ValueError(f"max_late must be >= 0, got {max_late}")
+    keys = np.arange(n, dtype=np.float64)
+    if frac > 0.0 and max_late > 0:
+        rng = np.random.default_rng(seed)
+        late = rng.random(n) < frac
+        # +0.5 breaks ties toward "after the on-time event at that slot"
+        keys[late] += rng.integers(1, max_late + 1, int(late.sum())) + 0.5
+    return np.argsort(keys, kind="stable")
 
 
 def load_jodie_csv(path: str, num_nodes: int | None = None) -> EventStream:

@@ -24,6 +24,7 @@ import jax
 
 from repro.kernels import flash_attn as _fa
 from repro.kernels import gru_cell as _gru
+from repro.kernels import link_score as _ls
 from repro.kernels import memory_update as _mu
 from repro.kernels import neighbor_attn as _nattn
 from repro.kernels import pres_filter as _pf
@@ -68,6 +69,10 @@ _register(KernelSpec(
     name="memory_update", impl=_mu.memory_update, ref=ref.memory_update_ref,
     blocks={"block_m": 128},
     doc="fused GRU + PRES filter + delta-rate memory-maintenance step"))
+_register(KernelSpec(
+    name="link_score", impl=_ls.link_score, ref=ref.link_score_ref,
+    blocks={"block_b": 32, "block_i": 128},
+    doc="pairwise link-decoder scores (serve recommend-topk, VMEM hidden)"))
 _register(KernelSpec(
     name="neighbor_attn", impl=_nattn.neighbor_attn,
     ref=ref.neighbor_attn_ref, blocks={},
@@ -125,6 +130,10 @@ def pres_predict(s_prev, delta_mean, scale, **kw):
 def memory_update(x, h, w, u, b, delta_mean, scale, gamma, **kw):
     return dispatch("memory_update", x, h, w, u, b, delta_mean, scale, gamma,
                     **kw)
+
+
+def link_score(h_src, h_items, w1, b1, w2, b2, **kw):
+    return dispatch("link_score", h_src, h_items, w1, b1, w2, b2, **kw)
 
 
 def neighbor_attn(q, k, v, valid, **kw):

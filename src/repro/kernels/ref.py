@@ -46,6 +46,22 @@ def memory_update_ref(x, h, w, u, b, delta_mean, scale, gamma, clip=5.0,
     return s_meas, fused, delta
 
 
+def link_score_ref(h_src, h_items, w1, b1, w2, b2):
+    """Pairwise link-decoder scores for serving's recommend-topk path.
+
+    h_src: (B, D), h_items: (I, D), w1: (2D, D), b1: (D,), w2: (D, 1),
+    b2: (1,) -> (B, I) scores. Row b, column i equals
+    mdgnn.link_logits on the pair (h_src[b], h_items[i]): the concatenated
+    matmul splits as h_src @ w1[:D] + h_items @ w1[D:], so the (B, I, D)
+    hidden layer is formed from two rank-D factors instead of B*I decoder
+    calls."""
+    d = h_src.shape[-1]
+    a = h_src.astype(jnp.float32) @ w1[:d]        # (B, D)
+    c = h_items.astype(jnp.float32) @ w1[d:]      # (I, D)
+    hidden = jax.nn.relu(a[:, None, :] + c[None, :, :] + b1)
+    return (hidden @ w2)[..., 0] + b2[0]
+
+
 def neighbor_attn_ref(q, k, v, valid):
     """TGN temporal neighbour attention.
     q: (M, E), k/v: (M, K, E), valid: (M, K) bool -> (M, E)."""

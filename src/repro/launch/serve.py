@@ -1,9 +1,16 @@
-"""Streaming MDGNN inference driver + zoo decode driver.
+"""Online MDGNN serving CLI + zoo decode driver (docs/SERVING.md).
 
-MDGNN serving: events arrive in micro-batches; each batch first answers link
-queries (scores for candidate pairs at the batch timestamps), then folds the
-observed events into the memory — the online regime MDGNNs are deployed in
-(recommenders, fraud). PRES runs in the fold step exactly as in training.
+Thin front-end over the serving subsystem (`repro.serve`): builds a
+ServeEngine — from a training checkpoint when `--checkpoint` is given
+(the launch/train.py `--checkpoint` bundle; model flags must match the
+training run) — and drives it with the Poisson arrival-clock replay
+harness over the stream's serving tail, reporting p50/p99 ingest/query
+latency, events/sec and the online AP.
+
+    PYTHONPATH=src python -m repro.launch.train --dataset wiki-small \
+        --pres --checkpoint /tmp/wiki.ckpt
+    PYTHONPATH=src python -m repro.launch.serve --dataset wiki-small \
+        --pres --checkpoint /tmp/wiki.ckpt
 
 Zoo serving: `--zoo <arch>` runs a reduced-config cached decode loop to
 demonstrate the serve_step path end-to-end on CPU.
@@ -15,14 +22,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.graph import datasets
 from repro.graph.datasets import SPECS
-from repro.graph.negatives import sample_negatives
 from repro.models.mdgnn import MDGNNConfig, init_params, init_state
-from repro.train import loop
-from repro.utils import metrics as metrics_lib
+from repro.serve import MicroBatcher, ServeEngine, replay
 
 
 def serve_mdgnn(args):
@@ -30,28 +34,47 @@ def serve_mdgnn(args):
     stream = datasets.get_dataset(args.dataset, args.seed)
     dst_range = (spec.n_users, spec.n_users + spec.n_items)
     cfg = MDGNNConfig(variant=args.model, n_nodes=stream.num_nodes,
-                      d_edge=stream.feat_dim, n_layers=args.n_layers,
-                      use_pres=args.pres)
-    key = jax.random.PRNGKey(args.seed)
-    params, _ = init_params(key, cfg)
-    state = init_state(cfg)
-    eval_step = loop.make_eval_step(cfg)
-    batches = stream.temporal_batches(args.batch_size)
-    t0 = time.perf_counter()
-    pos_all, neg_all, n_events = [], [], 0
-    for i in range(1, len(batches)):
-        key, sub = jax.random.split(key)
-        neg = sample_negatives(sub, batches[i], *dst_range)
-        state, lp, ln = eval_step(params, state, batches[i - 1], batches[i], neg)
-        pos_all.append(np.asarray(lp))
-        neg_all.append(np.asarray(ln))
-        n_events += int(jnp.sum(batches[i].mask))
-    dt = time.perf_counter() - t0
-    ap = metrics_lib.average_precision(np.concatenate(pos_all),
-                                       np.concatenate(neg_all))
-    print(f"[serve] {args.model} streamed {n_events} events in {dt:.2f}s "
-          f"({n_events / dt:.0f} ev/s), online AP={ap:.4f} "
-          f"(untrained params — use --checkpoint for a trained model)")
+                      d_edge=stream.feat_dim, d_mem=args.d_mem,
+                      d_msg=args.d_mem, d_embed=args.d_mem,
+                      n_layers=args.n_layers, use_pres=args.pres,
+                      use_kernels=args.use_kernels)
+    _, serve_s = stream.train_serve_split(args.serve_frac)
+    batcher = MicroBatcher(d_edge=stream.feat_dim)
+    if args.checkpoint:
+        engine = ServeEngine.from_checkpoint(args.checkpoint, cfg,
+                                             batcher=batcher,
+                                             item_range=dst_range)
+        origin = f"checkpoint {args.checkpoint}"
+    else:
+        params, _ = init_params(jax.random.PRNGKey(args.seed), cfg)
+        engine = ServeEngine(cfg, params, init_state(cfg), batcher=batcher,
+                             item_range=dst_range)
+        origin = "untrained params (pass --checkpoint for a trained model)"
+    # mean micro-batch = rate * tick; --batch-size sets it via the tick
+    tick = args.batch_size / args.rate
+    report = replay(engine, serve_s, dst_range, rate=args.rate, tick=tick,
+                    query_batch=args.query_batch, seed=args.seed,
+                    late_frac=args.late_frac, max_late=args.max_late,
+                    max_events=args.max_events)
+    print(f"[serve] {args.model}{'-PRES' if args.pres else ''} on "
+          f"{args.dataset} ({origin})")
+    print(f"  stream: {report.n_events} events over "
+          f"{report.sim_seconds:.1f}s simulated arrivals "
+          f"(rate={args.rate:.0f} ev/s, {report.n_ticks} ticks)")
+    print(f"  ingest: p50={report.ingest_p50_ms:.2f}ms "
+          f"p99={report.ingest_p99_ms:.2f}ms, "
+          f"{report.events_per_sec:.0f} events/sec end-to-end")
+    print(f"  query : p50={report.query_p50_ms:.2f}ms "
+          f"p99={report.query_p99_ms:.2f}ms, "
+          f"{report.queries_per_sec:.0f} queries/sec, "
+          f"online AP={report.online_ap:.4f}")
+    if args.topk:
+        srcs = serve_s.src[:min(8, len(serve_s))]
+        ts = serve_s.t[:min(8, len(serve_s))]
+        scores, items = engine.recommend_topk(srcs, ts, args.topk)
+        print(f"  topk  : k={args.topk} for {len(srcs)} sources, e.g. "
+              f"src {int(srcs[0])} -> items {items[0].tolist()}")
+    return report
 
 
 def serve_zoo(arch: str, steps: int):
@@ -87,7 +110,32 @@ def main(argv=None):
     ap.add_argument("--pres", action="store_true")
     ap.add_argument("--n-layers", type=int, default=1,
                     help="embedding depth (hops for tgn)")
-    ap.add_argument("--batch-size", type=int, default=200)
+    ap.add_argument("--d-mem", type=int, default=100,
+                    help="memory width — must match the checkpoint's run")
+    ap.add_argument("--batch-size", type=int, default=200,
+                    help="mean ingest micro-batch (sets the service tick "
+                         "as batch-size/rate; the batcher buckets it)")
+    ap.add_argument("--rate", type=float, default=5000.0,
+                    help="Poisson arrival intensity, events/sec")
+    ap.add_argument("--query-batch", type=int, default=32,
+                    help="positive queries sampled per service tick")
+    ap.add_argument("--serve-frac", type=float, default=0.3,
+                    help="tail fraction of the stream replayed as live "
+                         "traffic (0.15 = the chronological test split)")
+    ap.add_argument("--late-frac", type=float, default=0.0,
+                    help="fraction of events delivered out-of-order")
+    ap.add_argument("--max-late", type=int, default=0,
+                    help="bound (positions) on out-of-order delivery")
+    ap.add_argument("--max-events", type=int, default=None,
+                    help="cap on replayed events (CI smoke)")
+    ap.add_argument("--topk", type=int, default=0,
+                    help="also demo recommend_topk with this k")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route ingest folding and topk scoring through "
+                         "the registered Pallas kernels (docs/KERNELS.md)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="training checkpoint to serve "
+                         "(launch/train.py --checkpoint bundle)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--zoo", default=None, help="serve a zoo arch instead")
     ap.add_argument("--steps", type=int, default=16)

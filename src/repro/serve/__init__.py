@@ -1,0 +1,11 @@
+"""Online serving subsystem (docs/SERVING.md): device-resident MDGNN
+inference — ServeEngine (micro-batched ingest/query/topk over the training
+kernels), MicroBatcher (pad-to-bucket shape coalescing), replay (Poisson
+arrival-clock driver with latency/throughput reporting)."""
+from repro.serve.batcher import DEFAULT_BUCKETS, MicroBatcher
+from repro.serve.engine import ServeEngine
+from repro.serve.parity import check_offline_parity
+from repro.serve.replay import ReplayReport, replay
+
+__all__ = ["DEFAULT_BUCKETS", "MicroBatcher", "ServeEngine",
+           "ReplayReport", "check_offline_parity", "replay"]

@@ -1,0 +1,66 @@
+"""Offline-parity checker: a deployment sanity gate (docs/SERVING.md).
+
+Serving is restructured evaluation, not an approximation of it — so a
+ServeEngine driven ingest(prev) -> query(pos)/query(neg) over a reference
+stream must reproduce `loop.make_eval_step`'s fold-then-score pass to
+float tolerance, with the SAME lag-one order and negatives. This module
+is the single implementation of that contract, shared by the CI gate
+(`benchmarks/fig_serve.py --tiny`) and the test suite
+(`tests/test_serve.py`), so the two can't drift apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.events import EventStream
+from repro.graph.negatives import sample_negatives
+from repro.models.mdgnn import MDGNNConfig
+from repro.serve.batcher import MicroBatcher
+from repro.serve.engine import ServeEngine
+from repro.train import loop
+
+
+def check_offline_parity(cfg: MDGNNConfig, params, state,
+                         stream: EventStream, dst_range, *,
+                         batch_size: int = 64, seed: int = 7,
+                         batcher: MicroBatcher | None = None):
+    """Run the engine and the offline evaluator over `stream` in lockstep.
+
+    Returns (max_diff, n_scored, engine): the largest |engine - eval_step|
+    score gap over every valid positive/negative pair, how many pairs were
+    compared, and the driven engine (its `trace_counts` carry the
+    bounded-compile evidence). The caller asserts on the bound it wants
+    (1e-5 is the acceptance contract). `state` is not consumed — both
+    sides run on copies. The stream is consumed lazily
+    (`iter_temporal_batches`); the engine runs with frozen GMM trackers
+    (`track_deltas=False`), matching the evaluator's semantics."""
+    eval_step = loop.make_eval_step(cfg)
+    st = jax.tree.map(jnp.copy, state)
+    eng = ServeEngine(cfg, params, jax.tree.map(jnp.copy, state),
+                      track_deltas=False,
+                      batcher=batcher or MicroBatcher(d_edge=cfg.d_edge),
+                      item_range=dst_range)
+    key = jax.random.PRNGKey(seed)
+    it = stream.iter_temporal_batches(batch_size)
+    prev = next(it)
+    max_diff, n_scored = 0.0, 0
+    for batch in it:
+        key, sub = jax.random.split(key)
+        neg = sample_negatives(sub, batch, *dst_range)
+        st, lp, ln = eval_step(params, st, prev, batch, neg)
+        m = np.asarray(prev.mask)
+        eng.ingest(np.asarray(prev.src)[m], np.asarray(prev.dst)[m],
+                   np.asarray(prev.t)[m], np.asarray(prev.feat)[m])
+        pm, nm = np.asarray(batch.mask), np.asarray(neg.mask)
+        sp = eng.query(np.asarray(batch.src)[pm], np.asarray(batch.dst)[pm],
+                       np.asarray(batch.t)[pm])
+        sn = eng.query(np.asarray(neg.src)[nm], np.asarray(neg.dst)[nm],
+                       np.asarray(neg.t)[nm])
+        max_diff = max(max_diff,
+                       float(np.abs(sp - np.asarray(lp)[pm]).max()),
+                       float(np.abs(sn - np.asarray(ln)[nm]).max()))
+        n_scored += int(pm.sum() + nm.sum())
+        prev = batch
+    return max_diff, n_scored, eng

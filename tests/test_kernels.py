@@ -223,7 +223,7 @@ def test_registry_entries_complete():
     """Every kernel has a Pallas impl, a ref oracle (the parity target) and
     a one-line doc; dispatch resolves by name."""
     expected = {"gru_cell", "pres_filter", "pres_predict", "memory_update",
-                "neighbor_attn", "ssd_chunk", "flash_attn"}
+                "link_score", "neighbor_attn", "ssd_chunk", "flash_attn"}
     assert expected == set(ops.REGISTRY)
     for name, spec in ops.REGISTRY.items():
         assert spec.name == name
@@ -244,6 +244,61 @@ def test_registry_dispatch_equals_wrapper():
     got = ops.dispatch("gru_cell", x, h, w, u, b, interpret=True)
     want = ops.gru_cell(x, h, w, u, b, interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# link_score (serving recommend-topk scoring, docs/SERVING.md)
+# ---------------------------------------------------------------------------
+
+
+def _link_score_inputs(b, i, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(b, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(i, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(2 * d, d)) * 0.2, jnp.float32),
+            jnp.asarray(rng.normal(size=(d,)) * 0.1, jnp.float32),
+            jnp.asarray(rng.normal(size=(d, 1)) * 0.2, jnp.float32),
+            jnp.asarray(rng.normal(size=(1,)) * 0.1, jnp.float32))
+
+
+@pytest.mark.parametrize("b,i,d", [(1, 5, 32), (7, 30, 16), (40, 200, 32)])
+def test_link_score_matches_ref(b, i, d):
+    args = _link_score_inputs(b, i, d, seed=b * 100 + i)
+    out = ops.link_score(*args, interpret=True)
+    want = ref.link_score_ref(*args)
+    assert out.shape == (b, i)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_link_score_matches_pairwise_decoder():
+    """Row (b, i) must equal mdgnn.link_logits on that single pair — the
+    factored pairwise kernel and the training decoder are the same math."""
+    from repro.models import mdgnn
+    h_src, h_items, w1, b1, w2, b2 = _link_score_inputs(4, 9, 16, seed=3)
+    params = {"dec": {"w1": w1, "b1": b1, "w2": w2, "b2": b2}}
+    got = ops.link_score(h_src, h_items, w1, b1, w2, b2, interpret=True)
+    for bi in range(4):
+        row = mdgnn.link_logits(
+            params, jnp.broadcast_to(h_src[bi], h_items.shape), h_items)
+        np.testing.assert_allclose(np.asarray(got[bi]), np.asarray(row),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_link_score_gradients_match_oracle():
+    args = _link_score_inputs(6, 20, 16, seed=7)
+
+    def loss_k(*a):
+        return jnp.sum(jnp.tanh(ops.link_score(*a, interpret=True)))
+
+    def loss_r(*a):
+        return jnp.sum(jnp.tanh(ref.link_score_ref(*a)))
+
+    gk = jax.grad(loss_k, argnums=tuple(range(6)))(*args)
+    gr = jax.grad(loss_r, argnums=tuple(range(6)))(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------

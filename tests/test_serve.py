@@ -1,0 +1,351 @@
+"""Serving subsystem contracts (docs/SERVING.md):
+
+* ServeEngine ingest+query parity with the offline `loop.evaluate` scoring
+  to 1e-5 on the same stream (pure-jnp AND Pallas-kernel routing);
+* the micro-batcher's bounded compile count — at most one trace per
+  (op, bucket), zero new traces after warm-up;
+* warm-up's masked no-op batches leave the state bit-identical;
+* pad-invariance of the fold (bucket table doesn't change numerics);
+* recommend_topk consistency with dense pairwise queries;
+* late/out-of-order arrival handling + the arrival-clock helpers;
+* train -> save -> serve round-trip: restored trained params beat
+  untrained params on wiki-small's serving tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import datasets, events
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.serve import MicroBatcher, ServeEngine, check_offline_parity, \
+    replay
+from repro.train import loop
+
+
+def _cfg(stream, **kw):
+    base = dict(variant="tgn", n_nodes=stream.num_nodes,
+                d_edge=stream.feat_dim, d_mem=16, d_msg=16, d_time=8,
+                d_embed=16, n_neighbors=4, use_pres=True)
+    base.update(kw)
+    return MDGNNConfig(**base)
+
+
+def _init(cfg, seed=0):
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(seed), cfg)
+    return params, mdgnn.init_state(cfg)
+
+
+def _engine(cfg, params, state, stream, dst, **kw):
+    kw.setdefault("batcher", MicroBatcher(buckets=(16, 64),
+                                          d_edge=stream.feat_dim))
+    return ServeEngine(cfg, params, jax.tree.map(jnp.copy, state),
+                       item_range=dst, **kw)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_bucket_for():
+    b = MicroBatcher(buckets=(16, 64, 256))
+    assert b.bucket_for(1) == 16
+    assert b.bucket_for(16) == 16
+    assert b.bucket_for(17) == 64
+    assert b.bucket_for(256) == 256
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        b.bucket_for(257)
+
+
+def test_batcher_chunk_spans_cover_in_order():
+    b = MicroBatcher(buckets=(16, 64))
+    spans = list(b.chunk_spans(150))
+    assert spans == [(0, 64), (64, 128), (128, 150)]
+    assert list(b.chunk_spans(0)) == []
+
+
+def test_batcher_pad_events_masks_and_roundtrip():
+    b = MicroBatcher(buckets=(8, 32), d_edge=3)
+    n = 50
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 10, n).astype(np.int32)
+    dst = rng.integers(0, 10, n).astype(np.int32)
+    t = np.arange(n, dtype=np.float32)
+    feat = rng.normal(size=(n, 3)).astype(np.float32)
+    out = list(b.pad_events(src, dst, t, feat))
+    assert [eb.size for eb in out] == [32, 32]          # 32 + pad(18 -> 32)
+    got_src = np.concatenate(
+        [np.asarray(eb.src)[np.asarray(eb.mask)] for eb in out])
+    np.testing.assert_array_equal(got_src, src)
+    assert int(sum(np.asarray(eb.mask).sum() for eb in out)) == n
+
+
+def test_batcher_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        MicroBatcher(buckets=())
+    with pytest.raises(ValueError):
+        MicroBatcher(buckets=(0, 8))
+
+
+# ---------------------------------------------------------------------------
+# engine parity with the offline evaluator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_engine_matches_offline_evaluate(tiny_stream, tiny_spec, use_kernels):
+    """ingest(prev) -> query(pos/neg) must reproduce loop.evaluate's
+    eval_step scores to 1e-5 over the whole stream (same lag-one order,
+    same negatives) — via the shared checker in repro.serve.parity, the
+    same gate `benchmarks/fig_serve.py --tiny` runs in CI."""
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream, use_kernels=use_kernels)
+    params, state = _init(cfg)
+    max_diff, n_scored, eng = check_offline_parity(
+        cfg, params, state, tiny_stream, dst,
+        batcher=MicroBatcher(buckets=(16, 64), d_edge=tiny_stream.feat_dim))
+    assert n_scored > 1000
+    assert max_diff < 1e-5, f"serve/evaluate drift: {max_diff}"
+    assert all(c == 1 for c in eng.trace_counts.values())
+
+
+def test_ingest_pad_invariant(tiny_stream, tiny_spec):
+    """The same events folded through different bucket tables must produce
+    the same memory state — padding rows are numerically inert."""
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    s, d, t, f = (tiny_stream.src[:90], tiny_stream.dst[:90],
+                  tiny_stream.t[:90], tiny_stream.feat[:90])
+    e1 = _engine(cfg, params, state, tiny_stream, dst,
+                 batcher=MicroBatcher(buckets=(32,), d_edge=cfg.d_edge))
+    e2 = _engine(cfg, params, state, tiny_stream, dst,
+                 batcher=MicroBatcher(buckets=(128,), d_edge=cfg.d_edge))
+    # fold in identical 32-event requests so only the padding differs
+    for lo in range(0, 90, 32):
+        e1.ingest(s[lo:lo + 32], d[lo:lo + 32], t[lo:lo + 32], f[lo:lo + 32])
+        e2.ingest(s[lo:lo + 32], d[lo:lo + 32], t[lo:lo + 32], f[lo:lo + 32])
+    for a, b in zip(jax.tree.leaves(e1.state), jax.tree.leaves(e2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# compile-count contract + warm-up
+# ---------------------------------------------------------------------------
+
+
+def test_compiles_bounded_by_bucket_table(tiny_stream, tiny_spec):
+    """Arbitrary request sizes must trace at most once per (op, bucket) —
+    the pad-to-bucket contract the acceptance criteria pin."""
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    eng = _engine(cfg, params, state, tiny_stream, dst)
+    rng = np.random.default_rng(0)
+    for n in (1, 3, 16, 17, 40, 64, 64, 100, 5, 130):
+        lo = int(rng.integers(0, len(tiny_stream) - 150))
+        s = tiny_stream.src[lo:lo + n]
+        d = tiny_stream.dst[lo:lo + n]
+        t = tiny_stream.t[lo:lo + n]
+        eng.ingest(s, d, t, tiny_stream.feat[lo:lo + n])
+        eng.query(s, d, t)
+    buckets = set(eng.batcher.buckets)
+    for (op, size, *_), count in eng.trace_counts.items():
+        assert size in buckets, f"{op} compiled off-bucket size {size}"
+        assert count == 1, f"{op}@{size} retraced {count} times"
+    assert len(eng.trace_counts) <= 2 * len(buckets)
+
+
+def test_warmup_precompiles_and_is_noop(tiny_stream, tiny_spec):
+    """warmup() compiles every bucket via masked no-op batches: state stays
+    bit-identical and subsequent traffic adds ZERO traces."""
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    eng = _engine(cfg, params, state, tiny_stream, dst)
+    before = [np.asarray(x).copy() for x in jax.tree.leaves(eng.state)]
+    eng.warmup(topk_k=3)
+    for a, b in zip(before, jax.tree.leaves(eng.state)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    warm = dict(eng.trace_counts)
+    assert len(warm) == 3 * len(eng.batcher.buckets)   # ingest+query+topk
+    eng.ingest(tiny_stream.src[:40], tiny_stream.dst[:40],
+               tiny_stream.t[:40], tiny_stream.feat[:40])
+    eng.query(tiny_stream.src[:10], tiny_stream.dst[:10], tiny_stream.t[:10])
+    eng.recommend_topk(tiny_stream.src[:4], tiny_stream.t[:4], 3)
+    assert dict(eng.trace_counts) == warm, "live traffic retraced"
+
+
+# ---------------------------------------------------------------------------
+# recommend_topk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_topk_matches_dense_query(tiny_stream, tiny_spec, use_kernels):
+    """Top-k against the full item memory must agree with dense pairwise
+    query() scoring at the shared timestamp."""
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream, use_kernels=use_kernels)
+    params, state = _init(cfg)
+    eng = _engine(cfg, params, state, tiny_stream, dst)
+    eng.ingest(tiny_stream.src[:200], tiny_stream.dst[:200],
+               tiny_stream.t[:200], tiny_stream.feat[:200])
+    srcs = tiny_stream.src[200:204]
+    t0 = np.full(4, tiny_stream.t[204], np.float32)
+    vals, ids = eng.recommend_topk(srcs, t0, 5)
+    assert vals.shape == (4, 5) and ids.shape == (4, 5)
+    items = np.arange(dst[0], dst[1], dtype=np.int32)
+    for row, s in enumerate(srcs):
+        dense = eng.query(np.full(len(items), s, np.int32), items,
+                          np.full(len(items), t0[0], np.float32))
+        np.testing.assert_allclose(
+            np.sort(vals[row])[::-1], np.sort(dense)[::-1][:5],
+            atol=1e-5, rtol=1e-5)
+        assert set(ids[row]) <= set(items.tolist())
+
+
+def test_topk_requires_item_range(tiny_stream, tiny_spec):
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    eng = ServeEngine(cfg, params, state,
+                      batcher=MicroBatcher(d_edge=cfg.d_edge))
+    with pytest.raises(ValueError, match="item_range"):
+        eng.recommend_topk(np.zeros(2, np.int32), np.zeros(2, np.float32), 3)
+
+
+# ---------------------------------------------------------------------------
+# late / out-of-order arrivals + replay
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrival_clock_monotone():
+    arr = events.poisson_arrival_clock(500, rate=1000.0, seed=0)
+    assert arr.shape == (500,)
+    assert np.all(np.diff(arr) > 0)
+    assert 0.1 < arr[-1] < 5.0          # ~0.5s expected span
+    with pytest.raises(ValueError):
+        events.poisson_arrival_clock(10, rate=0.0)
+
+
+def test_late_arrival_order_bounded():
+    n, max_late = 300, 20
+    perm = events.late_arrival_order(n, frac=0.3, max_late=max_late, seed=0)
+    assert sorted(perm.tolist()) == list(range(n))     # a permutation
+    displacement = np.arange(n) - perm                  # delivery - origin
+    assert displacement.max() <= max_late               # bounded lateness
+    assert (perm != np.arange(n)).any()                 # actually reorders
+    np.testing.assert_array_equal(
+        events.late_arrival_order(n, frac=0.0, max_late=5), np.arange(n))
+
+
+def test_engine_folds_late_arrivals(tiny_stream, tiny_spec):
+    """Out-of-order delivery is folded, not dropped: every event lands in
+    the neighbour buffers and the scores stay finite (dt clamps + PRES
+    predict-correct absorb the negative time gaps)."""
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    eng = _engine(cfg, params, state, tiny_stream, dst)
+    perm = events.late_arrival_order(200, frac=0.25, max_late=40, seed=1)
+    shuffled = tiny_stream.slice(0, 200).reorder(perm)
+    n = eng.ingest(shuffled.src, shuffled.dst, shuffled.t, shuffled.feat)
+    assert n == 200
+    scores = eng.query(tiny_stream.src[200:232], tiny_stream.dst[200:232],
+                       tiny_stream.t[200:232])
+    assert np.all(np.isfinite(scores))
+    # memory table rows of touched nodes moved off the zero init
+    touched = np.unique(np.concatenate([shuffled.src, shuffled.dst]))
+    mem = np.asarray(eng.state["memory"].mem)
+    assert np.abs(mem[touched]).sum() > 0
+
+
+def test_replay_report(tiny_stream, tiny_spec):
+    dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    eng = _engine(cfg, params, state, tiny_stream, dst)
+    rep = replay(eng, tiny_stream, dst, rate=20000.0, tick=0.004,
+                 query_batch=8, max_events=300, seed=0,
+                 late_frac=0.1, max_late=20)
+    assert rep.n_events == 300
+    assert rep.n_queries > 0 and rep.n_ticks > 0
+    assert rep.events_per_sec > 0 and rep.seconds > 0
+    assert rep.query_p99_ms >= rep.query_p50_ms >= 0
+    assert 0.0 <= rep.online_ap <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# train -> save -> serve round-trip (checkpoint restore into the engine)
+# ---------------------------------------------------------------------------
+
+
+def test_train_save_serve_roundtrip(tmp_path):
+    """The satellite contract: a briefly trained wiki-small checkpoint,
+    restored through ServeEngine.from_checkpoint, must beat untrained
+    params on the held-out serving tail — and restoring under a mismatched
+    config must fail loudly."""
+    from repro.checkpoint import save_checkpoint
+    from repro.optim import optimizers
+
+    stream = datasets.get_dataset("wiki-small", 0)
+    spec = datasets.SPECS["wiki-small"]
+    dst = (spec.n_users, spec.n_users + spec.n_items)
+    train_s, serve_s = stream.train_serve_split(0.15)
+    cfg = MDGNNConfig(variant="tgn", n_nodes=stream.num_nodes,
+                      d_edge=stream.feat_dim, d_mem=32, d_msg=32, d_time=16,
+                      d_embed=32, n_neighbors=8, use_pres=True)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    opt_state = opt.init(params)
+    step = loop.make_train_step(cfg, opt)
+    key = jax.random.PRNGKey(1)
+    for _ in range(2):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, _ = loop.run_epoch(
+            params, opt_state, state, train_s.iter_temporal_batches(500),
+            cfg, step, sub, dst)
+    ckpt = tmp_path / "wiki.ckpt"
+    save_checkpoint(str(ckpt), {"params": params, "state": state})
+
+    kw = dict(rate=50000.0, tick=0.004, query_batch=32, seed=0,
+              max_events=1500)
+    eng = ServeEngine.from_checkpoint(str(ckpt), cfg, item_range=dst)
+    trained = replay(eng, serve_s, dst, **kw)
+    p0, _ = mdgnn.init_params(jax.random.PRNGKey(9), cfg)
+    untrained = replay(ServeEngine(cfg, p0, mdgnn.init_state(cfg),
+                                   item_range=dst), serve_s, dst, **kw)
+    assert trained.online_ap > untrained.online_ap, (
+        f"trained {trained.online_ap:.4f} <= untrained "
+        f"{untrained.online_ap:.4f}")
+
+    bad_cfg = dataclasses.replace(cfg, d_mem=64, d_msg=64, d_embed=64)
+    with pytest.raises(ValueError, match="shape|leaves"):
+        ServeEngine.from_checkpoint(str(ckpt), bad_cfg)
+
+
+def test_from_checkpoint_honors_shardings(tmp_path, tiny_stream):
+    """The shardings tree reaches load_checkpoint: restored leaves carry
+    the requested sharding (1-device mesh on CPU)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import save_checkpoint
+
+    cfg = _cfg(tiny_stream)
+    params, state = _init(cfg)
+    ckpt = tmp_path / "eng.ckpt"
+    save_checkpoint(str(ckpt), {"params": params, "state": state})
+    mesh = jax.make_mesh((1,), ("nodes",))
+    repl = NamedSharding(mesh, P())
+    shardings = jax.tree.map(lambda _: repl, {"params": params,
+                                              "state": state})
+    eng = ServeEngine.from_checkpoint(str(ckpt), cfg, shardings=shardings)
+    assert eng.state["memory"].mem.sharding == repl
+    assert eng.params["dec"]["w1"].sharding == repl
