@@ -139,10 +139,32 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
                      dispatches_per_epoch=dispatches)
 
 
+def run_metadata() -> dict:
+    """Provenance stamped into every results JSON: without the jax version,
+    backend and kernel execution mode a committed throughput number cannot
+    be compared against a re-run (the CPU-vs-TPU and interpret-vs-oracle
+    deltas are orders of magnitude — docs/KERNELS.md §Execution policy)."""
+    import jaxlib
+    from repro.kernels import ops as kops
+    pol = kops.execution_policy()
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": pol["backend"],
+        "kernels_default_mode": pol["default_mode"],
+        "kernels_env_mode": pol["env_mode"],
+        "autotune_entries": pol["autotune_entries"],
+        "device_count": jax.device_count(),
+        "cpu_count": __import__("os").cpu_count(),
+    }
+
+
 def emit(name: str, rows: Sequence[dict]):
-    """Print CSV to stdout and persist JSON to results/bench/<name>.json."""
+    """Print CSV to stdout and persist JSON to results/bench/<name>.json
+    as {"meta": run_metadata(), "rows": [...]}."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(list(rows), indent=2))
+    (RESULTS_DIR / f"{name}.json").write_text(
+        json.dumps({"meta": run_metadata(), "rows": list(rows)}, indent=2))
     if not rows:
         return
     cols = list(rows[0].keys())

@@ -31,6 +31,36 @@ LEVERS = {
 }
 
 
+# Nominal memory bandwidth per backend (bytes/s) for the kernel-level
+# roofline floor below: single-core DRAM stream for CPU, HBM for TPU. The
+# floor is a sanity anchor for autotune winners (an entry orders of
+# magnitude above it is dispatch/interpreter overhead, not bandwidth), not
+# a calibrated machine model.
+MEM_BW_BYTES = {"cpu": 2.0e10, "tpu": 1.2e12}
+
+
+def kernel_ceiling_ms(name: str, args, backend: str = "cpu",
+                      extra_kw: dict | None = None) -> float:
+    """Memory-roofline floor (ms) for one registry kernel at these args:
+    every input read once + every output written once at the backend's
+    nominal bandwidth. Output shapes come from jax.eval_shape of the
+    kernel's oracle, so no computation runs. benchmarks/autotune_kernels.py
+    stamps this next to each measured winner."""
+    import functools
+
+    import jax
+
+    from repro.kernels import ops as kops
+    spec = kops.get_kernel(name)
+    fn = functools.partial(spec.oracle or spec.ref, **(extra_kw or {}))
+    outs = jax.eval_shape(fn, *args)
+    arrays = [a for a in list(args) + jax.tree.leaves(outs)
+              if hasattr(a, "shape") and hasattr(a, "dtype")]
+    nbytes = sum(int(a.size) * a.dtype.itemsize for a in arrays)
+    bw = MEM_BW_BYTES.get(backend, MEM_BW_BYTES["cpu"])
+    return nbytes / bw * 1e3
+
+
 def _kind(shape_name: str) -> str:
     return {"train_4k": "train", "prefill_32k": "prefill"}.get(
         shape_name, "decode")

@@ -21,6 +21,8 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
                                online AP: kernels x late-arrivals
                                (docs/SERVING.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
+  autotune_kernels (kernels)   sweep execution modes/blocks at the model's
+                               shapes, persist winners to results/autotune/
   roofline         §Roofline   dry-run roofline table consolidation
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only name[,name]] [--fast]
@@ -48,6 +50,7 @@ BENCHES = [
     "fig_scan",
     "fig_serve",
     "kernels_micro",
+    "autotune_kernels",
     "roofline",
 ]
 

@@ -10,14 +10,21 @@ round trips per row (6 for the GRU, 4 for the filter); fused it is one read
 + one write — the TGL/MSPipe observation that batched-MDGNN throughput is
 won in exactly this scatter/update primitive.
 
+`memory_update_table` is the table-level form the training step actually
+dispatches: the same fused math with the memory-row gather and the
+write-back scatter pulled INTO the kernel via scalar-prefetch index maps
+and input/output aliasing, so the (N, D) table is read and written exactly
+once per batch (docs/KERNELS.md §memory_update_table — including the
+occurrence-order precondition that makes the in-place scatter hazard-free).
+
 `pres_predict` is the standalone Eq. 7 extrapolation used by the pipelined
 schedule's staleness fill (`train/pipeline.py::stale_read_table`): one
 elementwise pass over the whole table instead of three.
 
-The GMM mixture-mean gather stays OUTSIDE both kernels (gathers are XLA's
-job — `core/pres.py::mixture_mean`); the kernels take the gathered rows.
-Shapes/tiling, interpret-mode policy and the registry dispatch are
-documented in docs/KERNELS.md.
+The GMM mixture-mean gather stays OUTSIDE all of these (that gather mixes
+tracker state across components — `core/pres.py::mixture_mean`); the
+kernels take the gathered δ̄ rows. Shapes/tiling, the execution policy and
+the registry dispatch are documented in docs/KERNELS.md.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _memory_update_kernel(x_ref, h_ref, w_ref, u_ref, b_ref, dmean_ref,
@@ -128,6 +136,141 @@ def memory_update(x, h, w, u, b, delta_mean, scale, gamma, *,
     delta-rate) — see module docstring and docs/KERNELS.md."""
     return _diff_memory_update(block_m, clip, delta_mode, interpret)(
         x, h, w, u, b, delta_mean, scale, gamma)
+
+
+# ---------------------------------------------------------------------------
+# Fused touched-row table pass: gather -> memory_update -> scatter-back
+# ---------------------------------------------------------------------------
+
+
+def _memory_update_table_kernel(g_ref, wi_ref, hrow_ref, ltrow_ref, x_ref,
+                                t_ref, w_ref, u_ref, b_ref, dmean_ref,
+                                scale_ref, gamma_ref, tab_out, lt_out,
+                                meas_ref, fused_ref, delta_ref, *,
+                                clip, delta_mode):
+    del g_ref, wi_ref, ltrow_ref  # consumed by the BlockSpec index maps
+    x = x_ref[...].astype(jnp.float32)
+    h = hrow_ref[...].astype(jnp.float32)
+    gx = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+    gh = jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
+    d = h.shape[-1]
+    rx, zx, nx = gx[:, :d], gx[:, d:2 * d], gx[:, 2 * d:]
+    rh, zh, nh = gh[:, :d], gh[:, d:2 * d], gh[:, 2 * d:]
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    s_meas = (1.0 - z) * h + z * n
+    dmean = dmean_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)[:, None]
+    gamma = gamma_ref[0]
+    s_pred = h + jnp.clip(scale * dmean, -clip, clip)
+    fused = (1.0 - gamma) * s_pred + gamma * s_meas
+    base = s_pred if delta_mode == "innovation" else h
+    delta = (fused - base) / jnp.maximum(scale, 1.0)
+    tab_out[...] = fused.astype(tab_out.dtype)
+    lt_out[...] = t_ref[...].astype(lt_out.dtype)
+    meas_ref[...] = s_meas.astype(meas_ref.dtype)
+    fused_ref[...] = fused.astype(fused_ref.dtype)
+    delta_ref[...] = delta.astype(delta_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "delta_mode",
+                                             "interpret"))
+def _memory_update_table_pallas(table, last_t, x, gather_idx, write_idx,
+                                times, w, u, b, delta_mean, scale, gamma, *,
+                                clip: float = 5.0,
+                                delta_mode: str = "innovation",
+                                interpret: bool = True):
+    """table: (N, D) memory, last_t: (N,), x: (M, Din) messages,
+    gather_idx/write_idx: (M,) int32 row indices (N = masked-write dump
+    row, N + 1 = all-zeros masked-read row), times: (M,); weights/PRES args
+    as in memory_update. Returns (new_table, new_last_t, s_meas, fused,
+    delta).
+
+    One PrefetchScalarGridSpec pass over the M occurrences: each grid step
+    gathers its row straight from the (aliased) table block, runs the
+    fused GRU+PRES math, and scatters the result back through the output
+    index map — the gather/kernel/scatter hops around the old
+    "memory_update" dispatch collapsed into one kernel. The table and
+    last_t buffers are input_output_aliased, so the pass is in-place.
+
+    CORRECTNESS PRECONDITION (hazard-freedom through the aliased table):
+    occurrences must be ordered so that every gather of a node's row
+    happens at a grid step <= that node's written (selected) step, and
+    masked occurrences must gather row N + 1. mdgnn.occurrence_order
+    produces exactly this order; the oracle gathers everything up front,
+    so any violation shows up as a parity failure, not silent corruption."""
+    n, d = table.shape
+    m, din = x.shape
+    tab = jnp.concatenate([table, jnp.zeros((2, d), table.dtype)])
+    lt = jnp.concatenate([last_t, jnp.zeros((2,), last_t.dtype)])
+    gamma_arr = jnp.reshape(gamma.astype(jnp.float32), (1,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, g, wi: (g[i], 0)),     # h row
+            pl.BlockSpec((1,), lambda i, g, wi: (wi[i],)),        # lt (alias)
+            pl.BlockSpec((1, din), lambda i, g, wi: (i, 0)),      # x
+            pl.BlockSpec((1,), lambda i, g, wi: (i,)),            # times
+            pl.BlockSpec((din, 3 * d), lambda i, g, wi: (0, 0)),  # w
+            pl.BlockSpec((d, 3 * d), lambda i, g, wi: (0, 0)),    # u
+            pl.BlockSpec((3 * d,), lambda i, g, wi: (0,)),        # b
+            pl.BlockSpec((1, d), lambda i, g, wi: (i, 0)),        # dmean
+            pl.BlockSpec((1,), lambda i, g, wi: (i,)),            # scale
+            pl.BlockSpec((1,), lambda i, g, wi: (0,)),            # gamma
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, g, wi: (wi[i], 0)),    # table
+            pl.BlockSpec((1,), lambda i, g, wi: (wi[i],)),        # last_t
+            pl.BlockSpec((1, d), lambda i, g, wi: (i, 0)),        # s_meas
+            pl.BlockSpec((1, d), lambda i, g, wi: (i, 0)),        # fused
+            pl.BlockSpec((1, d), lambda i, g, wi: (i, 0)),        # delta
+        ])
+    outs = pl.pallas_call(
+        functools.partial(_memory_update_table_kernel, clip=clip,
+                          delta_mode=delta_mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n + 2, d), table.dtype),
+            jax.ShapeDtypeStruct((n + 2,), last_t.dtype),
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+        ],
+        # operand indices count the two prefetched scalar arrays first:
+        # 2 = tab, 3 = lt -> aliased onto outputs 0/1 (in-place table)
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(gather_idx, write_idx, tab, lt, x, times, w, u, b, delta_mean, scale,
+      gamma_arr)
+    return outs[0][:n], outs[1][:n], outs[2], outs[3], outs[4]
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_memory_update_table(clip: float, delta_mode: str, interpret: bool):
+    """Pallas forward, oracle backward. The int32 index args get float0
+    cotangents from jax.vjp of the ref (same convention as neighbor_attn's
+    bool mask); the table cotangent flows through the oracle's
+    gather/scatter transposes."""
+    from repro.kernels import autodiff, ref
+    return autodiff.oracle_vjp(
+        functools.partial(_memory_update_table_pallas, clip=clip,
+                          delta_mode=delta_mode, interpret=interpret),
+        functools.partial(ref.memory_update_table_ref, clip=clip,
+                          delta_mode=delta_mode))
+
+
+def memory_update_table(table, last_t, x, gather_idx, write_idx, times,
+                        w, u, b, delta_mean, scale, gamma, *,
+                        clip: float = 5.0, delta_mode: str = "innovation",
+                        interpret: bool = True):
+    """Differentiable fused gather -> memory_update -> scatter-back pass
+    over the touched rows — see _memory_update_table_pallas and
+    docs/KERNELS.md §memory_update_table."""
+    return _diff_memory_update_table(clip, delta_mode, interpret)(
+        table, last_t, x, gather_idx, write_idx, times, w, u, b,
+        delta_mean, scale, gamma)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Kernel registry + jit'd public wrappers for the Pallas kernels.
+"""Kernel registry + backend-aware execution policy for the Pallas kernels.
 
 Every kernel is registered as a `KernelSpec`: the differentiable Pallas
 entry point (custom_vjp forward, oracle backward), the pure-jnp oracle in
@@ -8,16 +8,29 @@ block-size policy. `dispatch(name, ...)` is the single entry point the
 model/training code routes through; the legacy per-kernel functions below
 remain as thin dispatch aliases.
 
-Interpret policy: on a real TPU `interpret=False` compiles to Mosaic; on
-this CPU container every kernel runs in interpret mode (the kernel body
-executed in Python) — numerics are identical, so parity tests and the
-use_kernels training path stay valid without a TPU. Callers can force
-either mode with the `interpret` kwarg. See docs/KERNELS.md for the
-per-kernel math, tiling choices and the "add a kernel" recipe.
+Execution policy (docs/KERNELS.md §Execution policy): dispatch picks, per
+kernel x shape x backend, one of three modes —
+
+    compiled   Pallas lowered by Mosaic (interpret=False; TPU)
+    interpret  Pallas body executed op-by-op (same numerics; any backend)
+    oracle     the jitted pure-jnp ref — XLA's fusion of the same math
+
+resolved with precedence: per-call `mode=` kwarg (an explicit `interpret=`
+kwarg counts as one) > `REPRO_KERNELS_MODE` env var > the persisted
+autotune cache (repro.kernels.autotune, keyed by backend + kernel + shape
+signature) > the backend default (tpu -> compiled, anything else ->
+oracle). The CPU default is the oracle because interpret mode executes the
+kernel body in Python — measurably slower than XLA at every shape this
+model emits (results/bench/fig_scan.json before/after) — while the oracle
+IS the reference computation, so `use_kernels` stays a no-loss switch.
+Backend/env resolution is cached once per process; `execution_policy()`
+exposes the resolved policy for logs and bench metadata.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from typing import Any, Callable, Mapping
 
 import jax
@@ -31,9 +44,60 @@ from repro.kernels import pres_filter as _pf
 from repro.kernels import ref
 from repro.kernels import ssd_chunk as _ssd
 
+MODES = ("auto", "compiled", "interpret", "oracle")
+ENV_VAR = "REPRO_KERNELS_MODE"
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"unknown kernel execution mode {mode!r}; valid "
+                         f"modes: {', '.join(MODES)} (per-call mode=, "
+                         f"cfg.kernels_mode, or the {ENV_VAR} env var)")
+
+
+@functools.lru_cache(maxsize=None)
+def backend() -> str:
+    """jax.default_backend(), resolved once per process (it walks the
+    device client on every call — measurable at dispatch rates)."""
+    return jax.default_backend()
+
+
+@functools.lru_cache(maxsize=None)
+def _env_mode() -> str | None:
+    """REPRO_KERNELS_MODE, validated and cached. Unset/"auto" -> None
+    (fall through to the autotune cache, then the backend default)."""
+    raw = os.environ.get(ENV_VAR, "").strip().lower()
+    if not raw or raw == "auto":
+        return None
+    _check_mode(raw)
+    return raw
+
+
+def _backend_default() -> str:
+    return "compiled" if backend() == "tpu" else "oracle"
+
+
+def reset_execution_policy() -> None:
+    """Drop every per-process policy memo (backend, env mode, autotune
+    file, jitted oracles) — for tests that flip the env var or swap the
+    autotune cache mid-process."""
+    from repro.kernels import autotune
+    backend.cache_clear()
+    _env_mode.cache_clear()
+    _oracle_fn.cache_clear()
+    autotune.clear_cache()
+
+
+def execution_policy() -> dict:
+    """The resolved execution policy, for logs and bench metadata."""
+    from repro.kernels import autotune
+    return {
+        "backend": backend(),
+        "env_mode": _env_mode(),
+        "default_mode": _env_mode() or _backend_default(),
+        "autotune_entries": autotune.n_entries(backend()),
+        "autotune_cache": str(autotune.cache_path(backend())),
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +108,12 @@ class KernelSpec:
     ref: Callable[..., Any]        # pure-jnp oracle (parity + VJP target)
     blocks: Mapping[str, int]      # default tile sizes forwarded to impl
     doc: str                       # one-line role (details: docs/KERNELS.md)
+    # oracle-mode adapter when the ref's calling convention differs from
+    # the impl's (e.g. ssd_chunk_ref is per-sample; the impl is batched)
+    oracle: Callable[..., Any] | None = None
+    # kwargs only the Pallas impl understands (stripped, with the block
+    # sizes and `interpret`, before the oracle is called)
+    impl_only: tuple[str, ...] = ()
 
 
 REGISTRY: dict[str, KernelSpec] = {}
@@ -51,6 +121,10 @@ REGISTRY: dict[str, KernelSpec] = {}
 
 def _register(spec: KernelSpec) -> None:
     REGISTRY[spec.name] = spec
+
+
+def _ssd_chunk_oracle(q, k, v, lcum, h0):
+    return jax.vmap(ref.ssd_chunk_ref)(q, k, v, lcum, h0)
 
 
 _register(KernelSpec(
@@ -70,19 +144,26 @@ _register(KernelSpec(
     blocks={"block_m": 128},
     doc="fused GRU + PRES filter + delta-rate memory-maintenance step"))
 _register(KernelSpec(
+    name="memory_update_table",
+    impl=_mu.memory_update_table, ref=ref.memory_update_table_ref,
+    blocks={},
+    doc="touched-row gather + fused GRU/PRES update + table scatter-back "
+        "in ONE pass (aliased (N, D) table, docs/KERNELS.md)"))
+_register(KernelSpec(
     name="link_score", impl=_ls.link_score, ref=ref.link_score_ref,
     blocks={"block_b": 32, "block_i": 128},
     doc="pairwise link-decoder scores (serve recommend-topk, VMEM hidden)"))
 _register(KernelSpec(
     name="neighbor_attn", impl=_nattn.neighbor_attn,
-    ref=ref.neighbor_attn_ref, blocks={},
+    ref=ref.neighbor_attn_ref, blocks={}, impl_only=("block_m",),
     doc="TGN temporal neighbour attention (softmax stays in VMEM)"))
 _register(KernelSpec(
-    name="ssd_chunk", impl=_ssd.ssd_chunk, ref=ref.ssd_chunk_ref, blocks={},
+    name="ssd_chunk", impl=_ssd.ssd_chunk, ref=ref.ssd_chunk_ref,
+    blocks={}, oracle=_ssd_chunk_oracle,
     doc="one SSD / mLSTM chunk with carried state"))
 _register(KernelSpec(
     name="flash_attn", impl=_fa.flash_attn, ref=_fa.flash_attn_ref,
-    blocks={},
+    blocks={}, impl_only=("q_block", "kv_block"),
     doc="flash attention (causal/windowed/GQA) for the zoo substrate"))
 
 
@@ -95,13 +176,47 @@ def get_kernel(name: str) -> KernelSpec:
                        f"{sorted(REGISTRY)}") from None
 
 
-def dispatch(name: str, *args, **kw):
-    """Single dispatch point: registry defaults (block sizes, interpret
-    policy) merged under the caller's kwargs, then the Pallas impl."""
+@functools.lru_cache(maxsize=None)
+def _oracle_fn(name: str, kw_items: tuple) -> Callable:
+    """One jitted oracle per (kernel, static kwargs). The refs are pure
+    jnp, so jit gives XLA's fused executable of the exact parity target —
+    differentiable without a custom VJP."""
+    spec = REGISTRY[name]
+    fn = spec.oracle or spec.ref
+    return jax.jit(functools.partial(fn, **dict(kw_items)))
+
+
+def dispatch(name: str, *args, mode: str | None = None, **kw):
+    """Single dispatch point: resolve the execution mode (per-call >
+    env > autotune cache > backend default), merge block sizes (per-call >
+    autotune cache > registry default), then run the Pallas impl or the
+    jitted oracle."""
     spec = get_kernel(name)
-    for k, v in spec.blocks.items():
+    if mode is not None and mode != "auto":
+        _check_mode(mode)
+    elif "interpret" in kw:
+        # an explicit interpret= kwarg is a per-call Pallas-mode override
+        # (the historical API every kernel test uses) — like mode=, it
+        # beats the env var and the autotune cache
+        mode = "interpret" if kw["interpret"] else "compiled"
+    else:
+        mode = _env_mode()
+    sel_blocks: Mapping[str, int] = {}
+    if mode is None:
+        from repro.kernels import autotune
+        sel = autotune.lookup(backend(), name, args)
+        if sel is not None:
+            mode = sel.get("mode")
+            sel_blocks = sel.get("blocks", {})
+    if mode is None or mode == "auto":
+        mode = _backend_default()
+    for k, v in {**dict(spec.blocks), **dict(sel_blocks)}.items():
         kw.setdefault(k, v)
-    kw.setdefault("interpret", _interpret_default())
+    if mode == "oracle":
+        strip = set(spec.blocks) | set(spec.impl_only) | {"interpret"}
+        okw = tuple(sorted((k, v) for k, v in kw.items() if k not in strip))
+        return _oracle_fn(name, okw)(*args)
+    kw.setdefault("interpret", mode == "interpret")
     return spec.impl(*args, **kw)
 
 
@@ -130,6 +245,16 @@ def pres_predict(s_prev, delta_mean, scale, **kw):
 def memory_update(x, h, w, u, b, delta_mean, scale, gamma, **kw):
     return dispatch("memory_update", x, h, w, u, b, delta_mean, scale, gamma,
                     **kw)
+
+
+def memory_update_table(table, last_t, x, gather_idx, write_idx, times,
+                        w, u, b, delta_mean, scale, gamma, **kw):
+    """Fused touched-row pass: gather h from `table` at gather_idx, run the
+    memory_update math, scatter the fused rows back at write_idx (row
+    n_nodes = masked-write dump, n_nodes+1 = masked-read zeros source).
+    Returns (new_table, new_last_t, s_meas, fused, delta)."""
+    return dispatch("memory_update_table", table, last_t, x, gather_idx,
+                    write_idx, times, w, u, b, delta_mean, scale, gamma, **kw)
 
 
 def link_score(h_src, h_items, w1, b1, w2, b2, **kw):

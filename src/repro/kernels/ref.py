@@ -46,6 +46,42 @@ def memory_update_ref(x, h, w, u, b, delta_mean, scale, gamma, clip=5.0,
     return s_meas, fused, delta
 
 
+def memory_update_table_ref(table, last_t, x, gather_idx, write_idx, times,
+                            w, u, b, delta_mean, scale, gamma, clip=5.0,
+                            delta_mode="innovation"):
+    """Fused touched-row pass over the WHOLE memory table: gather the
+    previous rows at gather_idx, run memory_update_ref on them, scatter the
+    fused rows (and their timestamps) back at write_idx.
+
+    Drop-slot convention (mdgnn.scatter_rows, one row wider here): row
+    n_nodes is the dump target for non-selected/masked writes; row
+    n_nodes + 1 is an all-zeros source that masked occurrences gather —
+    it is never written, so the Pallas kernel's sequential grid and this
+    gather-everything-first oracle see identical values at every step
+    (callers must order valid occurrences so each node's written occurrence
+    comes after all its gathers — mdgnn.occurrence_order).
+
+    Implemented WITHOUT widening the table (the Pallas impl pads; two
+    O(N·D) concat copies per step would make the oracle slower than the
+    unfused chain it replaces): masked gathers resolve to zeros via a
+    clamped gather + where, and the drop-slot write is a scatter with
+    mode="drop" — index n falls out of bounds and is discarded.
+
+    Returns (new_table (N, D), new_last_t (N,), s_meas, fused, delta)."""
+    n = table.shape[0]
+    ok = (gather_idx < n)[:, None]
+    h = jnp.where(ok, table[jnp.minimum(gather_idx, n - 1)],
+                  0.0).astype(jnp.float32)
+    s_meas, fused, delta = memory_update_ref(x, h, w, u, b, delta_mean,
+                                             scale, gamma, clip=clip,
+                                             delta_mode=delta_mode)
+    new_tab = table.at[write_idx].set(fused.astype(table.dtype),
+                                      mode="drop")
+    new_lt = last_t.at[write_idx].set(times.astype(last_t.dtype),
+                                      mode="drop")
+    return new_tab, new_lt, s_meas, fused, delta
+
+
 def link_score_ref(h_src, h_items, w1, b1, w2, b2):
     """Pairwise link-decoder scores for serving's recommend-topk path.
 

@@ -37,7 +37,8 @@ def serve_mdgnn(args):
                       d_edge=stream.feat_dim, d_mem=args.d_mem,
                       d_msg=args.d_mem, d_embed=args.d_mem,
                       n_layers=args.n_layers, use_pres=args.pres,
-                      use_kernels=args.use_kernels)
+                      use_kernels=args.use_kernels,
+                      kernels_mode=args.kernels_mode)
     _, serve_s = stream.train_serve_split(args.serve_frac)
     batcher = MicroBatcher(d_edge=stream.feat_dim)
     if args.checkpoint:
@@ -58,6 +59,12 @@ def serve_mdgnn(args):
                     max_events=args.max_events)
     print(f"[serve] {args.model}{'-PRES' if args.pres else ''} on "
           f"{args.dataset} ({origin})")
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        pol = kops.execution_policy()
+        print(f"  kernels: backend={pol['backend']} mode={cfg.kernels_mode} "
+              f"default={pol['default_mode']} "
+              f"autotune_entries={pol['autotune_entries']}")
     print(f"  stream: {report.n_events} events over "
           f"{report.sim_seconds:.1f}s simulated arrivals "
           f"(rate={args.rate:.0f} ev/s, {report.n_ticks} ticks)")
@@ -133,6 +140,11 @@ def main(argv=None):
     ap.add_argument("--use-kernels", action="store_true",
                     help="route ingest folding and topk scoring through "
                          "the registered Pallas kernels (docs/KERNELS.md)")
+    ap.add_argument("--kernels-mode", default="auto",
+                    choices=["auto", "compiled", "interpret", "oracle"],
+                    help="kernel execution mode (docs/KERNELS.md §Execution "
+                         "policy): auto resolves per backend + autotune "
+                         "cache; the others pin every dispatch")
     ap.add_argument("--checkpoint", default=None,
                     help="training checkpoint to serve "
                          "(launch/train.py --checkpoint bundle)")

@@ -50,6 +50,11 @@ def main(argv=None):
                          " + PRES filter kernel under --pres, gru_cell "
                          "otherwise) and the embedding attention through "
                          "the registered Pallas kernels (docs/KERNELS.md)")
+    ap.add_argument("--kernels-mode", default="auto",
+                    choices=["auto", "compiled", "interpret", "oracle"],
+                    help="kernel execution mode (docs/KERNELS.md §Execution "
+                         "policy): auto resolves per backend + autotune "
+                         "cache; the others pin every dispatch")
     ap.add_argument("--pipeline-depth", type=int, default=0,
                     help="staleness-aware pipelined schedule: the embedding "
                          "stage reads a memory snapshot at most K batch-"
@@ -83,6 +88,7 @@ def main(argv=None):
         n_layers=args.n_layers, n_heads=args.n_heads,
         use_pres=args.pres, beta=args.beta, delta_mode=args.delta_mode,
         pres_scale=args.pres_scale, use_kernels=args.use_kernels,
+        kernels_mode=args.kernels_mode,
         pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
@@ -115,6 +121,12 @@ def main(argv=None):
         make_batches = lambda: batches
     val_batches = val_s.temporal_batches(args.batch_size)
     history = []
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        pol = kops.execution_policy()
+        print(f"[kernels] backend={pol['backend']} mode={cfg.kernels_mode} "
+              f"default={pol['default_mode']} "
+              f"autotune_entries={pol['autotune_entries']}")
     print(f"[train] {args.model}{'-PRES' if args.pres else ''} on "
           f"{args.dataset}: {len(train_s)} events, K={n_batches} batches "
           f"of b={args.batch_size}"

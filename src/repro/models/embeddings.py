@@ -121,7 +121,7 @@ def neighbor_attention(q, k, v, valid, cfg):
         valid = jnp.repeat(valid, h, axis=0)
     if cfg.use_kernels:
         from repro.kernels import ops as kops
-        agg = kops.neighbor_attn(q, k, v, valid)
+        agg = kops.neighbor_attn(q, k, v, valid, mode=cfg.kernels_mode)
     else:
         agg = _sdpa_single_head(q, k, v, valid)
     if h > 1:

@@ -69,6 +69,11 @@ class MDGNNConfig:
     # production scale; compute stays fp32 (docs/EXPERIMENTS.md §Perf iter. 6)
     mem_dtype: str = "float32"
     use_kernels: bool = False    # route GRU/filter through Pallas kernels
+    # Kernel execution mode forwarded to kernels/ops.py dispatch:
+    # "auto" resolves per backend/autotune-cache (tpu -> compiled Pallas,
+    # cpu -> the jitted oracle); "compiled" | "interpret" | "oracle" pin it
+    # (docs/KERNELS.md §Execution policy). Only meaningful with use_kernels.
+    kernels_mode: str = "auto"
     # Staleness-aware pipelined schedule (docs/PIPELINE.md): the embedding
     # stage reads a memory snapshot at most `pipeline_depth` batch-writes
     # stale, with PRES Eq. 7 extrapolation filling the in-flight rows.
@@ -157,11 +162,24 @@ def compute_messages(params, cfg: MDGNNConfig, mem: MemoryState, batch: EventBat
     return nodes, times, msgs, mask
 
 
+def occurrence_order(nodes, times, mask):
+    """Sort permutation grouping the occurrences by node (masked ones
+    last), each node's chronologically-last occurrence FINAL within its
+    group. This is the hazard-free processing order the fused
+    memory_update_table kernel requires: the table pass walks occurrences
+    sequentially through an aliased buffer, so every gather of a node's
+    row must land before that node's (selected) write — grouping by node
+    with the selected occurrence last guarantees it (the selection below
+    flags exactly the final element of each group)."""
+    big = jnp.where(mask, times, -jnp.inf)
+    return jnp.lexsort((big, jnp.where(mask, nodes,
+                                       jnp.iinfo(jnp.int32).max)))
+
+
 def _last_occurrence_flags(nodes, times, mask):
     """True for the chronologically-last valid occurrence of each node."""
     m = nodes.shape[0]
-    big = jnp.where(mask, times, -jnp.inf)
-    order = jnp.lexsort((big, jnp.where(mask, nodes, jnp.iinfo(jnp.int32).max)))
+    order = occurrence_order(nodes, times, mask)
     n_sorted = nodes[order]
     m_sorted = mask[order]
     is_last_sorted = jnp.concatenate(

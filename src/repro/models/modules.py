@@ -5,6 +5,7 @@ All stateless-functional; the memory table itself lives in `MemoryState`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +112,15 @@ def rnn_cell(params, x, h):
 MEMORY_CELLS = {"gru": (gru_init, gru_cell), "rnn": (rnn_init, rnn_cell)}
 
 
+@functools.lru_cache(maxsize=None)
+def _kernel_gru_cell(mode: str):
+    """One partial per pinned mode, so kernel_memory_cell stays
+    identity-stable across calls (loop.memory_and_pres relies on that to
+    tell the registry default apart from an explicit gru_fn override)."""
+    from repro.kernels import ops as kops
+    return functools.partial(kops.gru_cell_params, mode=mode)
+
+
 def kernel_memory_cell(cfg):
     """Resolve the Pallas-backed MEMORY cell for this config, or None.
 
@@ -118,8 +128,15 @@ def kernel_memory_cell(cfg):
     asks for kernel routing and the cell has a registered kernel; the
     training steps pass the result as `gru_fn` to `mdgnn.memory_update`
     (None keeps the pure-jnp cell above). Single dispatch point:
-    `kernels/ops.py::dispatch` (docs/KERNELS.md §Registry)."""
+    `kernels/ops.py::dispatch` (docs/KERNELS.md §Registry).
+
+    With the default cfg.kernels_mode == "auto" the bare registry adapter
+    is returned (identity-stable — loop.memory_and_pres compares gru_fn
+    against it to detect an explicit override); a pinned mode wraps it in a
+    partial carrying mode=."""
     if cfg.use_kernels and cfg.memory_cell == "gru":
         from repro.kernels import ops as kops
-        return kops.gru_cell_params
+        if cfg.kernels_mode == "auto":
+            return kops.gru_cell_params
+        return _kernel_gru_cell(cfg.kernels_mode)
     return None

@@ -133,7 +133,8 @@ class ServeEngine:
         if self.cfg.use_kernels:
             from repro.kernels import ops as kops
             scores = kops.link_score(h_src, h_items, dec["w1"], dec["b1"],
-                                     dec["w2"], dec["b2"])
+                                     dec["w2"], dec["b2"],
+                                     mode=self.cfg.kernels_mode)
         else:
             from repro.kernels import ref
             scores = ref.link_score_ref(h_src, h_items, dec["w1"],

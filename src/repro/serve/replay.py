@@ -43,6 +43,10 @@ class ReplayReport:
     query_p99_ms: float
     online_ap: float         # AP over the sampled (pos, neg) query pairs
     sim_seconds: float       # simulated arrival-clock span
+    # jit traces that happened DURING the replay (after warmup), per
+    # (kind, size) key: any non-empty dict means a live request paid a
+    # compile and the latency percentiles above are polluted by it
+    post_warmup_traces: dict = dataclasses.field(default_factory=dict)
 
 
 def _pctl(xs, q):
@@ -80,6 +84,7 @@ def replay(engine: ServeEngine, stream: EventStream, dst_range, *,
 
     if warmup:
         engine.warmup(query=True)
+    warm_traces = dict(engine.trace_counts)
 
     ingest_times, query_times = [], []
     pos_scores, neg_scores = [], []
@@ -125,4 +130,8 @@ def replay(engine: ServeEngine, stream: EventStream, dst_range, *,
         ingest_p99_ms=_pctl(ingest_times, 99),
         query_p50_ms=_pctl(query_times, 50),
         query_p99_ms=_pctl(query_times, 99),
-        online_ap=ap, sim_seconds=float(arrival[-1]))
+        online_ap=ap, sim_seconds=float(arrival[-1]),
+        post_warmup_traces={
+            k: c - warm_traces.get(k, 0)
+            for k, c in engine.trace_counts.items()
+            if c > warm_traces.get(k, 0)})

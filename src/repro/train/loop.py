@@ -62,7 +62,8 @@ def _apply_pres(params, cfg, mem2, info, pres_state):
         gamma = jax.nn.sigmoid(params["pres"]["gamma_logit"])
         fused, delta = kops.pres_filter(
             info["s_prev"], info["s_meas"], dmean, scale, gamma,
-            clip=cfg.pres_clip, delta_mode=cfg.delta_mode)
+            clip=cfg.pres_clip, delta_mode=cfg.delta_mode,
+            mode=cfg.kernels_mode)
     else:
         s_pred = pres.predict(pres_state, info["s_prev"], scale, pres_ids,
                               clip=cfg.pres_clip)
@@ -80,12 +81,18 @@ def _apply_pres(params, cfg, mem2, info, pres_state):
 
 
 def _fused_memory_update(params, cfg, state, prev_batch: EventBatch):
-    """The whole memory-maintenance step in ONE fused Pallas pass over the
-    touched rows (registry kernel "memory_update"): GRU gates, Eq. 7
-    predict, Eq. 8 correct and the delta-rate statistic per VMEM tile — one
-    HBM read + one write per row instead of the cell/filter round trips
-    (docs/KERNELS.md §memory_update). Gathers (memory rows, GMM mixture
-    means) and the final table scatter stay in XLA.
+    """The whole memory-maintenance step in ONE fused pass over the touched
+    rows (registry kernel "memory_update_table"): the memory-row gather,
+    the GRU gates, Eq. 7 predict, Eq. 8 correct, the delta-rate statistic
+    AND the table/timestamp scatter-back, per occurrence, through an
+    aliased (N, D) table (docs/KERNELS.md §memory_update_table). Only the
+    GMM mixture-mean gather stays outside.
+
+    The occurrences are processed in mdgnn.occurrence_order — grouped by
+    node, each node's selected (written) occurrence last — which is the
+    kernel's hazard-freedom precondition; the (M, D) per-occurrence outputs
+    are inverse-permuted back so info/fused/delta line up with the batch
+    order every caller sees.
 
     Returns (mem_state, info, fused, delta) matching
     mdgnn.memory_update + _apply_pres numerics bit-for-bit in fp32."""
@@ -103,16 +110,21 @@ def _fused_memory_update(params, cfg, state, prev_batch: EventBatch):
     scale, pres_ids = _pres_scale_and_ids(cfg, info)
     dmean = pres.mixture_mean(state["pres"], pres_ids)
     gamma = jax.nn.sigmoid(params["pres"]["gamma_logit"])
-    s_meas, fused, delta = kops.memory_update(
-        msgs, h_prev, params["mem"]["w"], params["mem"]["u"],
-        params["mem"]["b"], dmean, scale, gamma,
-        clip=cfg.pres_clip, delta_mode=cfg.delta_mode)
+    order = mdgnn.occurrence_order(nodes, times, mask)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    # drop-slot rows (one wider than scatter_rows): N = masked-write dump,
+    # N + 1 = all-zeros masked-read source
+    gidx = jnp.where(mask, nodes, cfg.n_nodes + 1)[order].astype(jnp.int32)
+    widx = jnp.where(selected, nodes, cfg.n_nodes)[order].astype(jnp.int32)
+    new_mem, new_t, s_meas, fused, delta = kops.memory_update_table(
+        mem.mem, mem.last_update, msgs[order], gidx, widx, times[order],
+        params["mem"]["w"], params["mem"]["u"], params["mem"]["b"],
+        dmean[order], scale[order], gamma,
+        clip=cfg.pres_clip, delta_mode=cfg.delta_mode, mode=cfg.kernels_mode)
     # same compact-update boundary the cell path puts on its new_rows
-    info["s_meas"] = annotate.compact(s_meas)
-    fused = annotate.compact(fused)
-    write_idx = jnp.where(selected, nodes, cfg.n_nodes)
-    new_mem = mdgnn.scatter_rows(mem.mem, write_idx, fused)
-    new_t = mdgnn.scatter_rows(mem.last_update, write_idx, times)
+    info["s_meas"] = annotate.compact(s_meas[inv])
+    fused = annotate.compact(fused[inv])
+    delta = delta[inv]
     return (MemoryState(mem=new_mem, last_update=new_t), info, fused, delta)
 
 

@@ -105,7 +105,8 @@ def stale_read_table(cfg: MDGNNConfig, pres_state, pstate: PipelineState,
         from repro.kernels import ops as kops
         dmean = pres.mixture_mean(pres_state, pres_ids)
         filled = kops.pres_predict(pstate.read_mem.astype(jnp.float32),
-                                   dmean, scale, clip=cfg.pres_clip)
+                                   dmean, scale, clip=cfg.pres_clip,
+                                   mode=cfg.kernels_mode)
     else:
         filled = pres.predict(pres_state, pstate.read_mem.astype(jnp.float32),
                               scale, pres_ids, clip=cfg.pres_clip)

@@ -84,6 +84,29 @@ def test_train_step_kernel_parity(tiny_stream, tiny_spec, case):
                                np.asarray(m1["logit_p"]), atol=1e-4)
 
 
+@pytest.mark.parametrize("kernels_mode", ["interpret", "oracle"])
+def test_train_step_parity_pinned_modes(tiny_stream, tiny_spec, kernels_mode):
+    """The execution policy must be numerics-neutral: pinning
+    cfg.kernels_mode to either Pallas-interpret or the jitted oracle
+    (docs/KERNELS.md §Execution policy) matches the pure-jnp path at the
+    same acceptance bounds as the default route. This is the end-to-end
+    guard that the fused memory_update_table kernel (gather + GRU/PRES +
+    scatter through the aliased table) and its oracle agree through real
+    occurrence patterns, not just the synthetic unit shapes."""
+    p0, s0, m0 = _train_steps(tiny_stream, tiny_spec,
+                              _cfg(tiny_stream, False))
+    p1, s1, m1 = _train_steps(tiny_stream, tiny_spec,
+                              _cfg(tiny_stream, True,
+                                   kernels_mode=kernels_mode))
+    _assert_tree_close(p0, p1)
+    np.testing.assert_allclose(np.asarray(s0["memory"].mem),
+                               np.asarray(s1["memory"].mem), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s0["memory"].last_update),
+                               np.asarray(s1["memory"].last_update), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m0["logit_p"]),
+                               np.asarray(m1["logit_p"]), atol=1e-4)
+
+
 def test_eval_step_kernel_parity(tiny_stream, tiny_spec):
     batches = tiny_stream.temporal_batches(100)
     dst = (tiny_spec.n_users, tiny_spec.n_users + tiny_spec.n_items)

@@ -215,6 +215,116 @@ def test_memory_update_matches_composed_kernels():
 
 
 # ---------------------------------------------------------------------------
+# memory_update_table (fused gather -> memory_update -> scatter-back)
+# ---------------------------------------------------------------------------
+
+
+def _memory_update_table_args(rng, n, m, d, pad_frac=0.2):
+    """Args in the kernel's required occurrence order (the layout
+    mdgnn.occurrence_order produces): valid occurrences grouped by node,
+    each group's last occurrence selected (written), masked occurrences
+    at the end gathering the all-zeros row n + 1."""
+    n_valid = m - int(m * pad_frac)
+    nodes = np.sort(rng.integers(0, n, size=n_valid))
+    last = np.r_[nodes[:-1] != nodes[1:], True]
+    gidx = np.r_[nodes, np.full(m - n_valid, n + 1)]
+    widx = np.r_[np.where(last, nodes, n), np.full(m - n_valid, n)]
+    return (jnp.asarray(rng.normal(size=(n, d)), jnp.float32),   # table
+            jnp.abs(jnp.asarray(rng.normal(size=(n,)), jnp.float32)),
+            jnp.asarray(rng.normal(size=(m, d)), jnp.float32),   # x
+            jnp.asarray(gidx, jnp.int32), jnp.asarray(widx, jnp.int32),
+            jnp.abs(jnp.asarray(rng.normal(size=(m,)), jnp.float32)),  # times
+            jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32),
+            jnp.asarray(rng.normal(size=(d, 3 * d)) * 0.1, jnp.float32),
+            jnp.asarray(rng.normal(size=(3 * d,)) * 0.01, jnp.float32),
+            jnp.asarray(rng.normal(size=(m, d)) * 0.01, jnp.float32),
+            jnp.abs(jnp.asarray(rng.normal(size=(m,)), jnp.float32)),
+            jnp.asarray(0.4, jnp.float32))                       # gamma
+
+
+@pytest.mark.parametrize("n,m", [(20, 1), (50, 64), (300, 200)])
+@pytest.mark.parametrize("delta_mode", ["innovation", "transition"])
+def test_memory_update_table_matches_ref(n, m, delta_mode):
+    rng = np.random.default_rng(n + m)
+    args = _memory_update_table_args(rng, n, m, 32)
+    got = ops.memory_update_table(*args, interpret=True, clip=1.0,
+                                  delta_mode=delta_mode)
+    want = ref.memory_update_table_ref(*args, clip=1.0,
+                                       delta_mode=delta_mode)
+    assert len(got) == 5
+    for g, w in zip(got, want):
+        assert g.shape == w.shape
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+
+def test_memory_update_table_untouched_rows_preserved():
+    """Rows never written must come back bit-identical (the aliased table
+    is updated in place, not rebuilt)."""
+    rng = np.random.default_rng(55)
+    n, m, d = 60, 40, 16
+    args = _memory_update_table_args(rng, n, m, d)
+    table, widx = args[0], args[4]
+    new_tab, new_lt, *_ = ops.memory_update_table(*args, interpret=True)
+    touched = set(np.asarray(widx).tolist()) - {n, n + 1}
+    untouched = [i for i in range(n) if i not in touched]
+    assert untouched
+    np.testing.assert_array_equal(np.asarray(new_tab)[untouched],
+                                  np.asarray(table)[untouched])
+
+
+def test_memory_update_table_matches_unfused_chain():
+    """The fused table kernel must equal gather -> memory_update kernel ->
+    scatter — the three dispatches it collapses."""
+    rng = np.random.default_rng(56)
+    n, m, d = 80, 50, 32
+    args = _memory_update_table_args(rng, n, m, d)
+    (table, last_t, x, gidx, widx, times, w, u, b, dm, scale, gamma) = args
+    new_tab, new_lt, s_meas, fused, delta = ops.memory_update_table(
+        *args, interpret=True, clip=1.0)
+    tab_pad = jnp.concatenate([table, jnp.zeros((2, d), table.dtype)])
+    lt_pad = jnp.concatenate([last_t, jnp.zeros((2,), last_t.dtype)])
+    h = tab_pad[gidx]
+    s2, f2, d2 = ops.memory_update(x, h, w, u, b, dm, scale, gamma,
+                                   interpret=True, clip=1.0)
+    np.testing.assert_allclose(np.asarray(s_meas), np.asarray(s2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(f2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(d2), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(new_tab), np.asarray(tab_pad.at[widx].set(f2)[:n]),
+        atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(new_lt), np.asarray(lt_pad.at[widx].set(times)[:n]),
+        atol=1e-5)
+
+
+@pytest.mark.parametrize("delta_mode", ["innovation", "transition"])
+def test_memory_update_table_gradients_match_oracle(delta_mode):
+    """Custom VJP vs jax.grad of the ref over every float input — the table
+    cotangent must flow through the gather/scatter transposes."""
+    rng = np.random.default_rng(57)
+    args = _memory_update_table_args(rng, 40, 30, 16)
+    # differentiable args: everything except the int32 index operands (3, 4)
+    argnums = (0, 1, 2, 5, 6, 7, 8, 9, 10, 11)
+
+    def loss(fn):
+        def f(*a):
+            new_tab, new_lt, s_meas, fused, delta = fn(*a, clip=1.0,
+                                                       delta_mode=delta_mode)
+            return (jnp.sum(new_tab ** 2) + jnp.sum(new_lt ** 2)
+                    + jnp.sum(s_meas ** 2) + jnp.sum(fused ** 2)
+                    + jnp.sum(delta ** 2))
+        return f
+
+    import functools
+    gk = jax.grad(loss(functools.partial(ops.memory_update_table,
+                                         interpret=True)),
+                  argnums=argnums)(*args)
+    gr = jax.grad(loss(ref.memory_update_table_ref), argnums=argnums)(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -223,7 +333,8 @@ def test_registry_entries_complete():
     """Every kernel has a Pallas impl, a ref oracle (the parity target) and
     a one-line doc; dispatch resolves by name."""
     expected = {"gru_cell", "pres_filter", "pres_predict", "memory_update",
-                "link_score", "neighbor_attn", "ssd_chunk", "flash_attn"}
+                "memory_update_table", "link_score", "neighbor_attn",
+                "ssd_chunk", "flash_attn"}
     assert expected == set(ops.REGISTRY)
     for name, spec in ops.REGISTRY.items():
         assert spec.name == name
