@@ -64,7 +64,8 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
               use_smoothing=None, collect_per_batch=False,
               d_mem=32, n_layers=1, n_heads=2,
               use_kernels=False, pipeline_depth=0,
-              host_prefetch=False, scan_chunk=1) -> RunResult:
+              host_prefetch=False, scan_chunk=1,
+              dst_range=None) -> RunResult:
     cfg = MDGNNConfig(
         variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
@@ -93,7 +94,10 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
         batches = stream.temporal_batches(batch_size)
         make_batches = lambda: batches
         warm = (batches[0], batches[1])
-    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+    # explicit dst_range lets spec-less sources (event stores, CSVs) run;
+    # otherwise derived from the synthetic spec's bipartite band
+    if dst_range is None:
+        dst_range = (spec.n_users, spec.n_users + spec.n_items)
     n_steps = stream.num_batches(batch_size) - 1
     dispatches = -(-n_steps // scan_chunk) if scan_chunk > 1 else n_steps
 

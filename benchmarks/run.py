@@ -20,6 +20,9 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
   fig_serve        (serving)   p50/p99 ingest+query latency, events/sec,
                                online AP: kernels x late-arrivals
                                (docs/SERVING.md)
+  fig_stream       (data)      streamed (mmap store) vs in-RAM data path:
+                               events/sec + peak RSS over stream lengths,
+                               training-AP parity gate (docs/DATA.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   autotune_kernels (kernels)   sweep execution modes/blocks at the model's
                                shapes, persist winners to results/autotune/
@@ -49,6 +52,7 @@ BENCHES = [
     "fig_kernels",
     "fig_scan",
     "fig_serve",
+    "fig_stream",
     "kernels_micro",
     "autotune_kernels",
     "roofline",

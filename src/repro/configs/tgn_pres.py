@@ -25,4 +25,9 @@ PRODUCTION = MDGNNConfig(
     n_layers=2,          # 2-hop attention: the TGL/DistTGL production depth
     use_pres=True,
     beta=0.1,
+    # events stream from an on-disk store at this scale — host RSS stays
+    # one mapped window regardless of stream length (docs/DATA.md); build
+    # it once with: PYTHONPATH=src python tools/convert_events.py \
+    #     --synthetic stream-10m --out stores/stream-10m
+    event_store="stores/stream-10m",
 )

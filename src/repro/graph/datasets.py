@@ -80,6 +80,144 @@ def get_dataset(name: str, seed: int = 0) -> EventStream:
     return generate(SPECS[name], seed)
 
 
+# ---------------------------------------------------------------------------
+# Streaming power-law generator (docs/DATA.md §Generator)
+# ---------------------------------------------------------------------------
+#
+# The in-RAM `generate` above carries sequential state (community drift) in
+# a per-event Python loop — fine at 40k events, hopeless at 100M. The
+# streaming generator below is *stateless per event*: every random quantity
+# of event i is a pure hash of (seed, i), so any [lo, hi) chunk can be
+# produced independently, in any chunking, with byte-identical results —
+# the write-chunk invariance tests/test_store.py pins. Events are written
+# straight into a StoreWriter in bounded-memory chunks, which is what makes
+# the 100M+-event presets producible on a laptop-sized host.
+
+_SM_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM_MUL1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM_MUL2 = np.uint64(0x94D049BB133111EB)
+_N_STREAMS = 64        # independent hash streams per event (feat cap + 4)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized SplitMix64 finalizer (uint64 in/out, wrapping mod 2^64 —
+    the errstate silences numpy's scalar-overflow warning for the
+    intentional wraparound)."""
+    with np.errstate(over="ignore"):
+        z = (x + _SM_GAMMA).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(30))) * _SM_MUL1).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(27))) * _SM_MUL2).astype(np.uint64)
+        return z ^ (z >> np.uint64(31))
+
+
+def _u01(seed: int, idx: np.ndarray, stream: int) -> np.ndarray:
+    """Deterministic uniforms in [0, 1): one 53-bit draw per (event,
+    stream), independent of chunking by construction."""
+    key = _splitmix64(np.uint64(seed) * np.uint64(_N_STREAMS + 1)
+                      + np.uint64(stream))
+    h = _splitmix64(idx.astype(np.uint64) * np.uint64(_N_STREAMS)
+                    + np.uint64(stream) + key)
+    return (h >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))
+
+
+def _power_rank(u: np.ndarray, n: int, exponent: float) -> np.ndarray:
+    """Inverse-CDF sample of a bounded power-law rank in [0, n): density
+    ∝ (rank+1)^-exponent (continuous bounded-Pareto on [1, n+1), floored).
+    One uniform in, one rank out — no rejection, so the draw count per
+    event is fixed and chunk-invariant."""
+    if exponent <= 1.0:
+        raise ValueError(f"power-law exponent must be > 1, got {exponent}")
+    one_minus_a = 1.0 - exponent
+    hi = float(n + 1) ** one_minus_a
+    x = (1.0 + u * (hi - 1.0)) ** (1.0 / one_minus_a)
+    return np.minimum(x.astype(np.int64) - 1, n - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Streaming bipartite power-law event stream (user -> item)."""
+    name: str
+    n_users: int
+    n_items: int
+    n_events: int
+    feat_dim: int
+    exponent: float = 1.6      # user-activity / item-popularity tail
+    noise: float = 0.1         # chance of a uniform-random item
+    dt: float = 1.0            # mean model-time gap between events
+
+    @property
+    def num_nodes(self) -> int:
+        return self.n_users + self.n_items
+
+
+# CI-sized through capability-scale presets. `stream-tiny` is the CI
+# stream-smoke preset (converted + benchmarked every push); the larger ones
+# exist so scale claims are generated, not asserted — `stream-100m` writes
+# ~9 GB of records through a constant-RSS writer.
+STREAM_SPECS = {
+    "stream-tiny": StreamSpec("stream-tiny", 2_000, 500, 50_000, 8),
+    "stream-small": StreamSpec("stream-small", 100_000, 20_000, 1_000_000, 16),
+    "stream-10m": StreamSpec("stream-10m", 1_000_000, 200_000, 10_000_000, 32),
+    "stream-100m": StreamSpec("stream-100m", 8_000_000, 1_000_000,
+                              100_000_000, 32),
+}
+
+
+def stream_chunk(spec: StreamSpec, seed: int, lo: int, hi: int):
+    """Events [lo, hi) of the deterministic stream: (src, dst, t, feat).
+
+    Pure function of (spec, seed, lo, hi) — chunk boundaries cannot change
+    any value. Timestamps are `(i + u_i) * dt` (strictly increasing in
+    float64, non-decreasing after the store's float32 cast), so no
+    cross-chunk accumulator exists to drift with the chunking."""
+    if spec.feat_dim + 4 > _N_STREAMS:
+        raise ValueError(f"feat_dim {spec.feat_dim} exceeds the "
+                         f"{_N_STREAMS - 4} hash streams reserved for it")
+    idx = np.arange(lo, hi, dtype=np.uint64)
+    users = _power_rank(_u01(seed, idx, 0), spec.n_users, spec.exponent)
+    # per-user preference: rotate the global item-popularity ranking by a
+    # user hash, so hot users concentrate on their own item slice (the
+    # memory has something to learn) while item degrees stay heavy-tailed
+    base = _power_rank(_u01(seed, idx, 1), spec.n_items, spec.exponent)
+    offset = (_splitmix64(users.astype(np.uint64)
+                          + np.uint64(seed)) % np.uint64(spec.n_items)
+              ).astype(np.int64)
+    items = (base + offset) % spec.n_items
+    uniform = np.minimum((_u01(seed, idx, 2) * spec.n_items).astype(np.int64),
+                         spec.n_items - 1)
+    noisy = _u01(seed, idx, 3) < spec.noise
+    items = np.where(noisy, uniform, items)
+    t = ((idx.astype(np.float64) + _u01(seed, idx, 4)) * spec.dt
+         ).astype(np.float32)
+    feat_dim = max(spec.feat_dim, 1)
+    feat = np.empty((hi - lo, feat_dim), np.float32)
+    for k in range(feat_dim):
+        feat[:, k] = (_u01(seed, idx, 5 + k) * 0.2 - 0.1).astype(np.float32)
+    if spec.feat_dim:
+        cols = (users % feat_dim).astype(np.int64)
+        feat[np.arange(hi - lo), cols] += 1.0    # weak preference signal
+    return (users.astype(np.int32),
+            (spec.n_users + items).astype(np.int32), t, feat)
+
+
+def write_stream_spec(spec: StreamSpec, path, seed: int = 0,
+                      chunk_events: int = 1 << 20):
+    """Generate `spec` straight into an on-disk event store at `path`,
+    `chunk_events` events per append — bounded memory at any n_events.
+    Returns the opened `EventStore`."""
+    from repro.graph import store as store_lib
+    meta = {"generator": "stream_power_law", "seed": seed,
+            "n_users": spec.n_users, "n_items": spec.n_items,
+            "exponent": spec.exponent, "noise": spec.noise}
+    with store_lib.StoreWriter(path, num_nodes=spec.num_nodes,
+                               feat_dim=max(spec.feat_dim, 1),
+                               meta=meta) as w:
+        for lo in range(0, spec.n_events, chunk_events):
+            hi = min(lo + chunk_events, spec.n_events)
+            w.append(*stream_chunk(spec, seed, lo, hi))
+    return store_lib.EventStore.open(path)
+
+
 def node_labels(stream: EventStream, spec: SyntheticSpec, seed: int = 0):
     """Dynamic binary node labels for the node-classification task (paper
     Table 2): a user is 'positive' while in the first half of communities."""

@@ -294,16 +294,26 @@ def load_jodie_csv(path: str, num_nodes: int | None = None) -> EventStream:
     user_id,item_id,timestamp,state_label,feature0,feature1,...
     Items are offset into a bipartite id space after the users.
 
-    One vectorized np.loadtxt pass over the file instead of a per-line
-    Python loop — the loader used to dwarf small-run training time. Rows
-    with fewer than four fields (blank/truncated lines) are dropped up
-    front, matching the historical line-by-line tolerance."""
-    import io
-    with open(path) as f:
-        f.readline()                                   # header
-        rows = [ln for ln in f if ln.count(",") >= 3]
-    data = np.loadtxt(io.StringIO("".join(rows)), delimiter=",",
-                      dtype=np.float64, ndmin=2)
+    ONE vectorized np.loadtxt pass straight over the file — the loader
+    used to read every line into a Python string list and re-parse it
+    through io.StringIO, doubling both the I/O and the peak footprint of
+    the largest datasets. Only when that fast path trips on a malformed
+    row does the tolerant fallback re-read, dropping rows with fewer than
+    four fields (blank/truncated lines) exactly as the historical
+    line-by-line loader did; both paths share the same parser, so outputs
+    are bit-identical (tests/test_graph.py pins them on a checked-in mini
+    CSV). For streams past host RAM, convert once to an on-disk event
+    store instead (tools/convert_events.py, docs/DATA.md)."""
+    try:
+        data = np.loadtxt(path, delimiter=",", skiprows=1,
+                          dtype=np.float64, ndmin=2)
+    except ValueError:
+        import io
+        with open(path) as f:
+            f.readline()                               # header
+            rows = [ln for ln in f if ln.count(",") >= 3]
+        data = np.loadtxt(io.StringIO("".join(rows)), delimiter=",",
+                          dtype=np.float64, ndmin=2)
     src = data[:, 0].astype(np.int32)
     dst = data[:, 1].astype(np.int32)
     n_users = src.max() + 1

@@ -30,15 +30,22 @@ from repro.serve import MicroBatcher, ServeEngine, replay
 
 
 def serve_mdgnn(args):
-    spec = SPECS[args.dataset]
-    stream = datasets.get_dataset(args.dataset, args.seed)
-    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+    if args.event_store:
+        from repro.graph.store import EventStore
+        est = EventStore.open(args.event_store)
+        stream = est.stream()
+        dst_range = est.dst_range()
+    else:
+        spec = SPECS[args.dataset]
+        stream = datasets.get_dataset(args.dataset, args.seed)
+        dst_range = (spec.n_users, spec.n_users + spec.n_items)
     cfg = MDGNNConfig(variant=args.model, n_nodes=stream.num_nodes,
                       d_edge=stream.feat_dim, d_mem=args.d_mem,
                       d_msg=args.d_mem, d_embed=args.d_mem,
                       n_layers=args.n_layers, use_pres=args.pres,
                       use_kernels=args.use_kernels,
-                      kernels_mode=args.kernels_mode)
+                      kernels_mode=args.kernels_mode,
+                      event_store=args.event_store)
     _, serve_s = stream.train_serve_split(args.serve_frac)
     batcher = MicroBatcher(d_edge=stream.feat_dim)
     if args.checkpoint:
@@ -57,8 +64,10 @@ def serve_mdgnn(args):
                     query_batch=args.query_batch, seed=args.seed,
                     late_frac=args.late_frac, max_late=args.max_late,
                     max_events=args.max_events)
+    source = (f"store {args.event_store}" if args.event_store
+              else args.dataset)
     print(f"[serve] {args.model}{'-PRES' if args.pres else ''} on "
-          f"{args.dataset} ({origin})")
+          f"{source} ({origin})")
     if cfg.use_kernels:
         from repro.kernels import ops as kops
         pol = kops.execution_policy()
@@ -113,6 +122,11 @@ def serve_zoo(arch: str, steps: int):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="wiki-small", choices=list(SPECS))
+    ap.add_argument("--event-store", default=None,
+                    help="serve from an on-disk event store directory "
+                         "instead of --dataset (tools/convert_events.py, "
+                         "docs/DATA.md) — the replay tail stays memory-"
+                         "mapped")
     ap.add_argument("--model", default="tgn", choices=["tgn", "jodie", "apan"])
     ap.add_argument("--pres", action="store_true")
     ap.add_argument("--n-layers", type=int, default=1,

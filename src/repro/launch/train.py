@@ -27,6 +27,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="wiki-small", choices=list(SPECS))
     ap.add_argument("--csv", default=None, help="path to a real JODIE csv")
+    ap.add_argument("--event-store", default=None,
+                    help="path to an on-disk event store directory "
+                         "(tools/convert_events.py, docs/DATA.md): trains "
+                         "from windowed memmap slices with bounded RSS, "
+                         "bit-identical to the in-RAM path")
     ap.add_argument("--model", default="tgn", choices=["tgn", "jodie", "apan"])
     ap.add_argument("--pres", action="store_true")
     ap.add_argument("--beta", type=float, default=0.1)
@@ -71,7 +76,14 @@ def main(argv=None):
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
-    if args.csv:
+    streamed = args.event_store is not None
+    if streamed:
+        from repro.graph.store import EventStore
+        est = EventStore.open(args.event_store)
+        stream = est.stream()
+        spec = None
+        dst_range = est.dst_range()
+    elif args.csv:
         from repro.graph.events import load_jodie_csv
         stream = load_jodie_csv(args.csv)
         spec = None
@@ -89,7 +101,8 @@ def main(argv=None):
         use_pres=args.pres, beta=args.beta, delta_mode=args.delta_mode,
         pres_scale=args.pres_scale, use_kernels=args.use_kernels,
         kernels_mode=args.kernels_mode,
-        pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk)
+        pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk,
+        event_store=args.event_store)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
     state = init_state(cfg)
@@ -112,14 +125,22 @@ def main(argv=None):
     depth = cfg.pipeline_depth
     # depth 0 / scan trains from the materialised list (the historical
     # path); depth >= 1 re-carves batches lazily each epoch with host
-    # prefetch, overlapping batch prep with device compute
-    if depth:
+    # prefetch, overlapping batch prep with device compute. A store-backed
+    # stream never materialises: every epoch re-iterates windowed memmap
+    # slices (host prefetch overlaps the window mapping), yielding batches
+    # bit-identical to the in-RAM carve (docs/DATA.md)
+    if streamed or depth:
         make_batches = lambda: train_s.prefetch_batches(
             args.batch_size, depth=max(2, depth))
     else:
         batches = train_s.temporal_batches(args.batch_size)
         make_batches = lambda: batches
-    val_batches = val_s.temporal_batches(args.batch_size)
+    if streamed:
+        make_val_batches = lambda: val_s.iter_temporal_batches(
+            args.batch_size)
+    else:
+        val_batches = val_s.temporal_batches(args.batch_size)
+        make_val_batches = lambda: val_batches
     history = []
     if cfg.use_kernels:
         from repro.kernels import ops as kops
@@ -127,8 +148,10 @@ def main(argv=None):
         print(f"[kernels] backend={pol['backend']} mode={cfg.kernels_mode} "
               f"default={pol['default_mode']} "
               f"autotune_entries={pol['autotune_entries']}")
+    source = (f"store {args.event_store}" if streamed
+              else args.csv or args.dataset)
     print(f"[train] {args.model}{'-PRES' if args.pres else ''} on "
-          f"{args.dataset}: {len(train_s)} events, K={n_batches} batches "
+          f"{source}: {len(train_s)} events, K={n_batches} batches "
           f"of b={args.batch_size}"
           + (f", pipeline_depth={depth}" if depth else "")
           + (f", scan_chunk={cfg.scan_chunk}" if cfg.scan_chunk > 1 else ""))
@@ -142,8 +165,8 @@ def main(argv=None):
                 params, opt_state, state, make_batches(), cfg, train_step,
                 sub, dst_range)
         key, sub = jax.random.split(key)
-        vstate, vap, vauc = loop.evaluate(params, state, val_batches, cfg,
-                                          eval_step, sub, dst_range)
+        vstate, vap, vauc = loop.evaluate(params, state, make_val_batches(),
+                                          cfg, eval_step, sub, dst_range)
         history.append({"epoch": epoch, "train_ap": res.ap, "loss": res.loss,
                         "seconds": res.seconds, "val_ap": vap, "val_auc": vauc})
         print(f"  epoch {epoch}: loss={res.loss:.4f} train_ap={res.ap:.4f} "

@@ -85,6 +85,11 @@ class MDGNNConfig:
     # sequential per-batch loop (bit-exact). Mutually exclusive with
     # pipeline_depth >= 1 for now (repro.train.scan raises).
     scan_chunk: int = 1
+    # Data path (docs/DATA.md): path to an on-disk memory-mapped event
+    # store (tools/convert_events.py). Pure data-plumbing knob — batches
+    # are bit-identical to the in-RAM loaders, only peak host RSS changes
+    # — so it never touches compiled computations. None = in-RAM stream.
+    event_store: str | None = None
 
 
 # ---------------------------------------------------------------------------

@@ -109,3 +109,36 @@ def test_load_jodie_csv_roundtrip(tmp_path):
     assert stream.dst.min() >= 2
     np.testing.assert_array_equal(stream.src, [0, 0, 1])
     np.testing.assert_array_equal(stream.t, [1.0, 2.0, 3.0])
+
+
+def test_load_jodie_csv_pinned_mini(tmp_path):
+    """Regression pin for the single-pass loader on a checked-in mini CSV
+    containing a truncated line and a blank line (the malformed rows the
+    tolerant fallback path must drop) — outputs are pinned exactly, and
+    the np.loadtxt fast path over the clean rows must produce the
+    identical stream (the two parse paths are bit-identical)."""
+    import pathlib
+    csv = pathlib.Path(__file__).parent / "data" / "mini_jodie.csv"
+    stream = load_jodie_csv(str(csv))
+    assert len(stream) == 6
+    assert stream.num_nodes == 6                  # 3 users + 3 offset items
+    np.testing.assert_array_equal(stream.src, [0, 1, 2, 0, 1, 2])
+    np.testing.assert_array_equal(stream.dst, [3, 5, 4, 5, 3, 5])
+    np.testing.assert_array_equal(stream.t,
+                                  np.float32([1.0, 2.0, 2.5, 3.5, 4.0, 5.0]))
+    np.testing.assert_array_equal(
+        stream.feat,
+        np.float32([[0.5, -0.25], [0.1, 0.3], [0.0, 0.9],
+                    [-1.0, 2.0], [0.25, 0.75], [1.5, -0.5]]))
+    # the clean file (malformed rows pre-dropped) takes the fast path and
+    # must land on the same stream
+    clean = tmp_path / "clean.csv"
+    lines = csv.read_text().splitlines()
+    clean.write_text("\n".join(
+        [lines[0]] + [ln for ln in lines[1:] if ln.count(",") >= 3]) + "\n")
+    fast = load_jodie_csv(str(clean))
+    np.testing.assert_array_equal(fast.src, stream.src)
+    np.testing.assert_array_equal(fast.dst, stream.dst)
+    np.testing.assert_array_equal(fast.t, stream.t)
+    np.testing.assert_array_equal(fast.feat, stream.feat)
+    assert fast.num_nodes == stream.num_nodes

@@ -1,0 +1,489 @@
+"""On-disk event store (docs/DATA.md): writer/reader round-trips, write-
+chunk byte invariance, windowed slicing vs the in-RAM contract, batch
+parity at arbitrary window sizes, the chunk-boundary training guarantee
+(one epoch from the store bit-identical to in-RAM across all three
+engines), the streaming power-law generator's determinism and tail, the
+chunked CSR index, and the convert_events CLI."""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.graph import csr as csr_lib
+from repro.graph import datasets
+from repro.graph import store as store_lib
+from repro.graph.datasets import STREAM_SPECS, StreamSpec
+from repro.graph.events import EventStream
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.train import loop, pipeline, scan
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade the property sweeps to skips, keep the rest
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):          # noqa: D103 - no-op decorator stand-ins
+        return lambda f: f
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DST = (50, 80)                   # tiny_stream's bipartite item band
+
+
+def _store(tmp_path, stream, name="store", chunk=200):
+    return store_lib.write_stream(stream, tmp_path / name,
+                                  chunk_events=chunk,
+                                  meta={"n_users": 50, "n_items": 30})
+
+
+def _column_bytes(path):
+    return {name: (pathlib.Path(path) / name).read_bytes()
+            for name, _ in store_lib.COLUMNS.values()}
+
+
+def _assert_streams_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.src), np.asarray(b.src))
+    np.testing.assert_array_equal(np.asarray(a.dst), np.asarray(b.dst))
+    np.testing.assert_array_equal(np.asarray(a.t, np.float32),
+                                  np.asarray(b.t, np.float32))
+    np.testing.assert_array_equal(np.asarray(a.feat), np.asarray(b.feat))
+
+
+def _assert_batches_equal(got, want):
+    got, want = list(got), list(want)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        for field in ("src", "dst", "t", "feat", "mask"):
+            np.testing.assert_array_equal(np.asarray(getattr(g, field)),
+                                          np.asarray(getattr(w, field)))
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Writer / reader round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_columns(tmp_path, tiny_stream):
+    store = _store(tmp_path, tiny_stream)
+    assert store.n_events == len(tiny_stream)
+    assert store.num_nodes == tiny_stream.num_nodes
+    assert store.feat_dim == tiny_stream.feat_dim
+    assert store.nbytes == store.n_events * (12 + 4 * store.feat_dim)
+    _assert_streams_equal(store.stream(), tiny_stream)
+    # full-range window too (fresh mappings, same bytes)
+    _assert_streams_equal(store.window(0), tiny_stream)
+
+
+def test_write_chunk_byte_invariance(tmp_path, tiny_stream):
+    """The file bytes depend only on the event sequence, never on the
+    append chunking — the writer-side half of chunk-boundary parity."""
+    a = _store(tmp_path, tiny_stream, "a", chunk=97)
+    b = _store(tmp_path, tiny_stream, "b", chunk=len(tiny_stream))
+    assert _column_bytes(a.path) == _column_bytes(b.path)
+
+
+def test_dst_range_meta(tmp_path, tiny_stream):
+    store = _store(tmp_path, tiny_stream)
+    assert store.dst_range() == DST
+    bare = store_lib.write_stream(tiny_stream, tmp_path / "bare")
+    assert bare.dst_range() == (0, tiny_stream.num_nodes)
+
+
+def test_writer_validation(tmp_path, tiny_stream):
+    s = tiny_stream
+    with pytest.raises(ValueError, match="feat_dim"):
+        store_lib.StoreWriter(tmp_path / "x", num_nodes=10, feat_dim=0)
+    with store_lib.StoreWriter(tmp_path / "w", num_nodes=s.num_nodes,
+                               feat_dim=s.feat_dim) as w:
+        with pytest.raises(ValueError, match="ragged"):
+            w.append(s.src[:5], s.dst[:4], s.t[:5], s.feat[:5])
+        with pytest.raises(ValueError, match="feat must be"):
+            w.append(s.src[:5], s.dst[:5], s.t[:5], s.feat[:5, :-1])
+        with pytest.raises(ValueError, match="num_nodes"):
+            w.append(np.full(3, s.num_nodes, np.int32), s.dst[:3],
+                     s.t[:3], s.feat[:3])
+        w.append(s.src[:5], s.dst[:5], s.t[:5], s.feat[:5])
+        with pytest.raises(ValueError, match="chronological"):
+            w.append(s.src[:5], s.dst[:5], s.t[:5] - 100.0, s.feat[:5])
+
+
+def test_open_rejects_bad_stores(tmp_path, tiny_stream):
+    with pytest.raises(FileNotFoundError, match="not an event store"):
+        store_lib.EventStore.open(tmp_path / "nope")
+    store = _store(tmp_path, tiny_stream)
+    hdr = json.loads((store.path / store_lib.HEADER_NAME).read_text())
+    for patch, err in (({"magic": "junk"}, "bad magic"),
+                       ({"version": 99}, "unsupported store version"),
+                       ({"n_events": 17}, "truncated or mismatched")):
+        (store.path / store_lib.HEADER_NAME).write_text(
+            json.dumps({**hdr, **patch}))
+        with pytest.raises(ValueError, match=err):
+            store_lib.EventStore.open(store.path)
+
+
+def test_interrupted_writer_leaves_no_header(tmp_path, tiny_stream):
+    with pytest.raises(RuntimeError):
+        with store_lib.StoreWriter(tmp_path / "crash",
+                                   num_nodes=tiny_stream.num_nodes,
+                                   feat_dim=tiny_stream.feat_dim) as w:
+            w.append(tiny_stream.src[:5], tiny_stream.dst[:5],
+                     tiny_stream.t[:5], tiny_stream.feat[:5])
+            raise RuntimeError("boom")
+    assert not (tmp_path / "crash" / store_lib.HEADER_NAME).exists()
+
+
+# ---------------------------------------------------------------------------
+# Windowed slicing == in-RAM slicing
+# ---------------------------------------------------------------------------
+
+
+def test_slice_matches_inram_fixed_cases(tmp_path, tiny_stream):
+    stream = _store(tmp_path, tiny_stream).stream()
+    for lo, hi in [(0, 600), (0, 0), (17, 17), (3, 451), (599, 600),
+                   (-5, 1000), (300, 200), (550, 9999)]:
+        got = stream.slice(lo, hi)
+        want = tiny_stream.slice(max(0, min(lo, 600)),
+                                 max(0, min(lo, 600), min(hi, 600)))
+        assert len(got) == len(want)
+        _assert_streams_equal(got, want)
+        # nested slices keep composing like numpy's
+        _assert_streams_equal(got.slice(2, 11), want.slice(2, 11))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed "
+                    "(see requirements-dev.txt)")
+@settings(max_examples=25, deadline=None)
+@given(st.integers(-100, 700), st.integers(-100, 700),
+       st.sampled_from([1, 7, 64, 600, 10_000]))
+def test_slice_matches_inram_property(lo, hi, window_events):
+    """Arbitrary (offset, length) windows off the store equal the in-RAM
+    carve — numpy clamping semantics included — at any window size."""
+    stream = _PROP.store.stream(window_events=window_events)
+    n = len(_PROP.ram)
+    clo = max(0, min(lo, n))
+    want = _PROP.ram.slice(clo, max(clo, min(hi, n)))
+    got = stream.slice(lo, hi)
+    assert len(got) == len(want)
+    _assert_streams_equal(got, want)
+
+
+class _PropFixture:
+    """Module-scoped store for the hypothesis sweeps (hypothesis forbids
+    function-scoped fixtures, so build once lazily at import)."""
+
+    def __init__(self):
+        self._built = None
+
+    def _build(self):
+        if self._built is None:
+            import tempfile
+            tmp = tempfile.mkdtemp(prefix="test_store_prop_")
+            ram = datasets.generate(
+                datasets.SyntheticSpec("prop", 50, 30, 600, 8), seed=0)
+            store = store_lib.write_stream(ram, pathlib.Path(tmp) / "s")
+            self._built = (ram, store)
+        return self._built
+
+    @property
+    def ram(self):
+        return self._build()[0]
+
+    @property
+    def store(self):
+        return self._build()[1]
+
+
+_PROP = _PropFixture()
+
+
+# ---------------------------------------------------------------------------
+# Batch parity: every window size yields the in-RAM batches bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window_events", [64, 77, 150, 600, 100_000])
+def test_batch_parity_any_window(tmp_path, tiny_stream, window_events):
+    store = _store(tmp_path, tiny_stream)
+    for batch_size in (50, 77):
+        _assert_batches_equal(
+            store.stream(window_events).iter_temporal_batches(batch_size),
+            tiny_stream.iter_temporal_batches(batch_size))
+
+
+def test_split_parity(tmp_path, tiny_stream):
+    """chronological_split / train_serve_split carve the same boundaries
+    off the store as off RAM (they ride on `slice`)."""
+    stream = _store(tmp_path, tiny_stream).stream()
+    for got, want in zip(stream.chronological_split(),
+                         tiny_stream.chronological_split()):
+        _assert_streams_equal(got, want)
+    for got, want in zip(stream.train_serve_split(0.3),
+                         tiny_stream.train_serve_split(0.3)):
+        _assert_streams_equal(got, want)
+
+
+def test_materialize_roundtrip(tmp_path, tiny_stream):
+    got = _store(tmp_path, tiny_stream).stream().materialize(chunk_events=123)
+    assert isinstance(got, EventStream) and not isinstance(
+        got, store_lib.StoreStream)
+    _assert_streams_equal(got, tiny_stream)
+
+
+# ---------------------------------------------------------------------------
+# THE guarantee: one epoch of training from the store is bit-identical to
+# the in-RAM path — params, memory table, PRES trackers, neighbour ring,
+# mailbox — for every engine and any window size.
+# ---------------------------------------------------------------------------
+
+
+def _engine_epoch(engine_name, stream, cfg_kw, batch_source):
+    cfg = MDGNNConfig(variant=cfg_kw.pop("variant", "tgn"),
+                      n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
+                      d_mem=8, d_msg=8, d_time=4, d_embed=8, n_neighbors=4,
+                      use_pres=True, **cfg_kw)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    opt = optimizers.adamw(1e-3)
+    opt_state = opt.init(params)
+    key = jax.random.PRNGKey(1)
+    if engine_name == "scanned":
+        engine = scan.ScanEngine(cfg, opt)
+        return engine.run_epoch(params, opt_state, state, batch_source,
+                                key, DST)
+    if engine_name == "pipelined":
+        step = pipeline.make_train_step(cfg, opt)
+        return pipeline.run_epoch(params, opt_state, state, batch_source,
+                                  cfg, step, key, DST)
+    step = loop.make_train_step(cfg, opt)
+    return loop.run_epoch(params, opt_state, state, batch_source, cfg,
+                          step, key, DST)
+
+
+ENGINES = [("sequential", {}), ("pipelined", {"pipeline_depth": 2}),
+           ("scanned", {"scan_chunk": 4})]
+
+
+@pytest.mark.parametrize("engine_name,cfg_kw", ENGINES)
+@pytest.mark.parametrize("window_events", [64, 600])
+def test_epoch_from_store_bit_identical(tmp_path, tiny_stream, engine_name,
+                                        cfg_kw, window_events):
+    store = _store(tmp_path, tiny_stream)
+    p_ref, o_ref, s_ref, res_ref = _engine_epoch(
+        engine_name, tiny_stream, dict(cfg_kw),
+        tiny_stream.temporal_batches(50))
+    p_st, o_st, s_st, res_st = _engine_epoch(
+        engine_name, tiny_stream, dict(cfg_kw),
+        store.stream(window_events).iter_temporal_batches(50))
+    assert res_st.loss == res_ref.loss
+    assert res_st.ap == res_ref.ap
+    _assert_tree_equal(p_ref, p_st)
+    _assert_tree_equal(o_ref, o_st)
+    _assert_tree_equal(s_ref, s_st)     # memory + pres + neighbors (+ …)
+
+
+def test_epoch_from_store_bit_identical_apan_mailbox(tmp_path, tiny_stream):
+    """APAN's mailbox is the one state buffer tgn doesn't exercise."""
+    store = _store(tmp_path, tiny_stream)
+    _, _, s_ref, _ = _engine_epoch(
+        "sequential", tiny_stream, {"variant": "apan"},
+        tiny_stream.temporal_batches(50))
+    _, _, s_st, _ = _engine_epoch(
+        "sequential", tiny_stream, {"variant": "apan"},
+        store.stream(97).iter_temporal_batches(50))
+    _assert_tree_equal(s_ref["mailbox"], s_st["mailbox"])
+    _assert_tree_equal(s_ref, s_st)
+
+
+# ---------------------------------------------------------------------------
+# Streaming power-law generator
+# ---------------------------------------------------------------------------
+
+
+def _gen_spec(n_events=20_000):
+    return StreamSpec("gen-test", 1_000, 200, n_events, 4, exponent=1.6)
+
+
+def test_generator_chunk_invariance(tmp_path):
+    """Same seed -> byte-identical store files for ANY write chunking."""
+    spec = _gen_spec()
+    a = datasets.write_stream_spec(spec, tmp_path / "a", seed=7,
+                                   chunk_events=777)
+    b = datasets.write_stream_spec(spec, tmp_path / "b", seed=7,
+                                   chunk_events=spec.n_events)
+    assert _column_bytes(a.path) == _column_bytes(b.path)
+    c = datasets.write_stream_spec(spec, tmp_path / "c", seed=8,
+                                   chunk_events=777)
+    assert _column_bytes(c.path) != _column_bytes(a.path)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed "
+                    "(see requirements-dev.txt)")
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 5000))
+def test_generator_chunk_invariance_property(chunk_events):
+    """Chunk boundaries cannot change a single value: any [lo, hi) chunk
+    equals the same range carved from the one-shot generation."""
+    spec = _gen_spec(5_000)
+    full = datasets.stream_chunk(spec, seed=3, lo=0, hi=spec.n_events)
+    for lo in range(0, spec.n_events, chunk_events):
+        hi = min(lo + chunk_events, spec.n_events)
+        part = datasets.stream_chunk(spec, seed=3, lo=lo, hi=hi)
+        for got, want in zip(part, full):
+            np.testing.assert_array_equal(got, want[lo:hi])
+
+
+def test_generator_timestamps_monotone():
+    spec = _gen_spec()
+    _, _, t, _ = datasets.stream_chunk(spec, seed=0, lo=0, hi=spec.n_events)
+    assert np.all(np.diff(t) >= 0)
+    assert t[0] >= 0.0
+
+
+def test_generator_bounds_and_bipartite():
+    spec = _gen_spec()
+    src, dst, _, feat = datasets.stream_chunk(spec, seed=1, lo=0,
+                                              hi=spec.n_events)
+    assert src.min() >= 0 and src.max() < spec.n_users
+    assert dst.min() >= spec.n_users and dst.max() < spec.num_nodes
+    assert feat.shape == (spec.n_events, spec.feat_dim)
+
+
+def test_generator_power_law_exponent():
+    """The user-activity tail matches the requested exponent: log-log fit
+    of occurrence counts over the top ranks."""
+    spec = StreamSpec("exp-test", 5_000, 500, 200_000, 1, exponent=1.6)
+    src, _, _, _ = datasets.stream_chunk(spec, seed=0, lo=0, hi=spec.n_events)
+    counts = np.sort(np.bincount(src, minlength=spec.n_users))[::-1]
+    ranks = np.arange(1, 201)
+    fitted = -np.polyfit(np.log(ranks), np.log(counts[:200]), 1)[0]
+    assert abs(fitted - spec.exponent) < 0.25, (
+        f"fitted exponent {fitted:.2f} vs requested {spec.exponent}")
+
+
+def test_stream_specs_ci_preset():
+    """The CI preset stays CI-sized; every preset is internally coherent."""
+    assert STREAM_SPECS["stream-tiny"].n_events <= 100_000
+    for spec in STREAM_SPECS.values():
+        assert spec.exponent > 1.0 and spec.feat_dim + 4 <= datasets._N_STREAMS
+
+
+# ---------------------------------------------------------------------------
+# Chunked CSR index
+# ---------------------------------------------------------------------------
+
+
+def _brute_neighbors(stream, node):
+    out = []
+    src, dst = np.asarray(stream.src), np.asarray(stream.dst)
+    t = np.asarray(stream.t)
+    for e in range(len(stream)):
+        if src[e] == node:
+            out.append((dst[e], t[e], e))
+        if dst[e] == node:
+            out.append((src[e], t[e], e))
+    return out
+
+
+def test_csr_matches_brute_force(tiny_stream):
+    index = csr_lib.build_csr(tiny_stream, chunk_events=113)
+    assert index.nnz == 2 * len(tiny_stream)
+    for node in [0, 3, 49, 50, 79]:
+        want = _brute_neighbors(tiny_stream, node)
+        nbr, ts, eid = index.neighbors(node)
+        assert index.degree(node) == len(want)
+        np.testing.assert_array_equal(nbr, [w[0] for w in want])
+        np.testing.assert_array_equal(ts, [w[1] for w in want])
+        np.testing.assert_array_equal(eid, [w[2] for w in want])
+        k = 3
+        rn, rt, re_ = index.recent(node, k)
+        np.testing.assert_array_equal(rn, [w[0] for w in want[-k:]])
+        np.testing.assert_array_equal(re_, [w[2] for w in want[-k:]])
+
+
+def test_csr_chunk_invariance_and_memmap_roundtrip(tmp_path, tiny_stream):
+    store = _store(tmp_path, tiny_stream)
+    ram = csr_lib.build_csr(tiny_stream, chunk_events=311)
+    disk = csr_lib.build_csr(store, path=tmp_path / "csr", chunk_events=173)
+    reopened = csr_lib.CSRIndex.open(tmp_path / "csr")
+    for index in (disk, reopened):
+        np.testing.assert_array_equal(np.asarray(index.indptr),
+                                      np.asarray(ram.indptr))
+        np.testing.assert_array_equal(np.asarray(index.nbr),
+                                      np.asarray(ram.nbr))
+        np.testing.assert_array_equal(np.asarray(index.ts),
+                                      np.asarray(ram.ts))
+        np.testing.assert_array_equal(np.asarray(index.eid),
+                                      np.asarray(ram.eid))
+
+
+def test_csr_eid_recovers_features(tmp_path, tiny_stream):
+    """eid indexes back into the event store: the stored feature row of
+    any neighbour entry is the original event's."""
+    store = _store(tmp_path, tiny_stream)
+    index = csr_lib.build_csr(store, chunk_events=97)
+    nbr, _, eid = index.neighbors(7)
+    for e in eid[:5]:
+        view = store.window(int(e), int(e) + 1)
+        np.testing.assert_array_equal(np.asarray(view.feat[0]),
+                                      np.asarray(tiny_stream.feat[int(e)]))
+
+
+def test_csr_open_rejects_bad_magic(tmp_path, tiny_stream):
+    csr_lib.build_csr(tiny_stream, path=tmp_path / "csr")
+    hdr = json.loads((tmp_path / "csr" / csr_lib.HEADER_NAME).read_text())
+    (tmp_path / "csr" / csr_lib.HEADER_NAME).write_text(
+        json.dumps({**hdr, "magic": "junk"}))
+    with pytest.raises(ValueError, match="bad magic"):
+        csr_lib.CSRIndex.open(tmp_path / "csr")
+
+
+# ---------------------------------------------------------------------------
+# convert_events CLI
+# ---------------------------------------------------------------------------
+
+
+def test_convert_events_cli(tmp_path):
+    """End-to-end: CSV -> store -> identical batches, plus --csr."""
+    env = {"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu"}
+    csv = REPO_ROOT / "tests" / "data" / "mini_jodie.csv"
+    out = tmp_path / "from_csv"
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "tools" / "convert_events.py"),
+         "--csv", str(csv), "--out", str(out), "--csr"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "events" in proc.stdout
+    store = store_lib.EventStore.open(out)
+    from repro.graph.events import load_jodie_csv
+    ram = load_jodie_csv(str(csv))
+    assert store.n_events == len(ram)
+    assert store.dst_range() == (3, 6)   # 3 users, 3 items in the mini CSV
+    _assert_streams_equal(store.stream(), ram)
+    _assert_batches_equal(store.stream().iter_temporal_batches(4),
+                          ram.iter_temporal_batches(4))
+    index = csr_lib.CSRIndex.open(out / "csr")
+    assert index.nnz == 2 * len(ram)
