@@ -23,6 +23,9 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
   fig_stream       (data)      streamed (mmap store) vs in-RAM data path:
                                events/sec + peak RSS over stream lengths,
                                training-AP parity gate (docs/DATA.md)
+  fig_dist         (dist)      devices x events/sec on the emulated host
+                               mesh, per engine; --tiny is the CI parity +
+                               perf gate (docs/DISTRIBUTED.md)
   kernels_micro    (kernels)   oracle timings + kernel validation deltas
   autotune_kernels (kernels)   sweep execution modes/blocks at the model's
                                shapes, persist winners to results/autotune/
@@ -53,6 +56,7 @@ BENCHES = [
     "fig_scan",
     "fig_serve",
     "fig_stream",
+    "fig_dist",
     "kernels_micro",
     "autotune_kernels",
     "roofline",

@@ -72,6 +72,18 @@ def main(argv=None):
                          "sampling and donated state; 1 = the sequential "
                          "per-batch loop (bit-exact). Mutually exclusive "
                          "with --pipeline-depth >= 1")
+    ap.add_argument("--n-shards", type=int, default=1,
+                    help="memory-parallel shards (docs/DISTRIBUTED.md): "
+                         "partitions every node-indexed table over a "
+                         "jax.sharding.Mesh by node_id %% n_shards with one "
+                         "all_to_all routing exchange per step; needs "
+                         ">= n_shards jax devices (emulate on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--shard-budget", type=int, default=None,
+                    help="static per-(sender, owner) routing-lane budget; "
+                         "default derives the overflow-free bound, smaller "
+                         "values trade dropped updates (counted in "
+                         "route_overflow) for smaller exchanges")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -102,12 +114,24 @@ def main(argv=None):
         pres_scale=args.pres_scale, use_kernels=args.use_kernels,
         kernels_mode=args.kernels_mode,
         pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk,
-        event_store=args.event_store)
+        event_store=args.event_store, n_shards=args.n_shards,
+        shard_budget=args.shard_budget)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
     state = init_state(cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
+    if cfg.n_shards > 1:
+        # shard-major-permute the node tables onto the mesh and replicate
+        # params/opt state; training then runs unchanged — the engines
+        # route through repro.train.routing behind cfg.n_shards
+        from repro.train import routing
+        state = routing.shard_state(cfg, state)
+        params, opt_state = routing.replicate((params, opt_state),
+                                              cfg.n_shards)
+        print(f"[dist] memory-parallel over {cfg.n_shards} shards "
+              f"({len(jax.devices())} devices, "
+              f"budget={cfg.shard_budget or 'auto'})")
     # cfg.use_kernels routes the full memory-maintenance step and the
     # embedding attention through the kernel registry (docs/KERNELS.md)
     # inside make_train_step / embed_nodes;
@@ -171,6 +195,12 @@ def main(argv=None):
                         "seconds": res.seconds, "val_ap": vap, "val_auc": vauc})
         print(f"  epoch {epoch}: loss={res.loss:.4f} train_ap={res.ap:.4f} "
               f"val_ap={vap:.4f} val_auc={vauc:.4f} ({res.seconds:.1f}s)")
+    if cfg.n_shards > 1:
+        # back to the natural single-device layout so checkpoints are
+        # interchangeable with (and restorable by) unsharded runs
+        from repro.train import routing
+        state = routing.unshard_state(cfg, state)
+        params = jax.device_get(params)
     if args.checkpoint:
         save_checkpoint(args.checkpoint, {"params": params, "state": state})
         print(f"[ckpt] saved to {args.checkpoint}")

@@ -90,6 +90,18 @@ class MDGNNConfig:
     # are bit-identical to the in-RAM loaders, only peak host RSS changes
     # — so it never touches compiled computations. None = in-RAM stream.
     event_store: str | None = None
+    # Memory-parallel training over a real 1-D device mesh
+    # (docs/DISTRIBUTED.md): every node table is partitioned by
+    # node_id % n_shards and each batch's touched rows are delivered to
+    # their owner shard with a single all-to-all (repro.train.routing).
+    # 1 = the single-device path, untouched.
+    n_shards: int = 1
+    # Static per-(sender, owner) routing-lane row budget. None derives the
+    # overflow-free default (the sender's occurrence-slice length); smaller
+    # budgets shrink the all-to-all wire bytes but may mask overflowing
+    # rows — the count is surfaced in the step metrics (route_overflow),
+    # never silently dropped.
+    shard_budget: int | None = None
 
 
 # ---------------------------------------------------------------------------

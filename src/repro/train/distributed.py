@@ -8,6 +8,14 @@ Sharding scheme (docs/DESIGN.md §Sharding):
   * model parameters — replicated (they are MLP/GRU-sized)
 GSPMD inserts the gather/scatter collectives for memory-row access; driving
 those down is hillclimb material in docs/EXPERIMENTS.md §Perf.
+
+This module LOWERS those specs (dry-run roofline material — nothing here
+executes on more than one device). The *executed* multi-device path is
+`repro.train.routing` behind `cfg.n_shards`: explicit shard_map +
+hand-placed all_to_all/psum collectives with a parity suite on an
+emulated host mesh (docs/DISTRIBUTED.md, tests/test_distributed_mesh.py).
+The two are complementary — this file answers "what would GSPMD do at
+256 chips", routing answers "run it, correctly, on the devices you have".
 """
 from __future__ import annotations
 

@@ -143,7 +143,16 @@ def memory_and_pres(params, cfg: MDGNNConfig, state, prev_batch: EventBatch,
 
     An explicitly overridden memory cell (gru_fn other than the registry
     default) suppresses the fused path — the caller asked for that exact
-    cell to run."""
+    cell to run.
+
+    With cfg.n_shards > 1 the memory/PRES tables are mesh-sharded and the
+    whole stage runs through the cross-shard routing protocol
+    (repro.train.routing, docs/DISTRIBUTED.md) — same contract, with
+    info additionally carrying "route_overflow"."""
+    if cfg.n_shards > 1:
+        from repro.train import routing
+        return routing.sharded_memory_and_pres(params, cfg, state,
+                                               prev_batch, gru_fn=gru_fn)
     if (cfg.use_kernels and cfg.use_pres and cfg.memory_cell == "gru"
             and gru_fn in (None, modules.kernel_memory_cell(cfg))):
         return _fused_memory_update(params, cfg, state, prev_batch)
@@ -191,7 +200,12 @@ def maintain_state(cfg: MDGNNConfig, params, state2, aux,
                    prev_batch: EventBatch):
     """Non-differentiable post-step state maintenance: PRES tracker update,
     neighbour ring buffers, APAN mailbox. Shared by the sequential and the
-    pipelined train steps."""
+    pipelined train steps. With cfg.n_shards > 1 every table updates
+    owner-locally on its shard (repro.train.routing)."""
+    if cfg.n_shards > 1:
+        from repro.train import routing
+        return routing.sharded_maintain_state(cfg, params, state2, aux,
+                                              prev_batch)
     state2 = jax.lax.stop_gradient(state2)
     if cfg.use_pres:
         track_ids = (aux["info_nodes"] % cfg.pres_buckets
@@ -230,7 +244,14 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
                                                    prev_batch, gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         # ------------------------------------------------ link prediction --
-        logit_p, logit_n = endpoint_logits(params, cfg, state2, pos, neg)
+        # sharded runs: the (unchanged) embedding stack reads a replicated
+        # natural-layout view — one all-gather, exact scatter transpose
+        if cfg.n_shards > 1:
+            from repro.train import routing
+            embed_state = routing.natural_state_view(cfg, state2)
+        else:
+            embed_state = state2
+        logit_p, logit_n = endpoint_logits(params, cfg, embed_state, pos, neg)
         loss = link_bce(logit_p, logit_n, pos.mask, neg.mask)
         # ------------------------------------------- coherence smoothing ---
         pen = coherence.coherence_penalty(info["s_prev"], fused,
@@ -246,6 +267,8 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
             "info_nodes": info["nodes"], "info_selected": info["selected"],
             "info_mask": info["mask"],
         }
+        if "route_overflow" in info:
+            aux["route_overflow"] = info["route_overflow"]
         return loss, (state2, aux)
 
     def train_step(params, opt_state, state, prev_batch, pos, neg):
@@ -257,6 +280,10 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
         state2 = maintain_state(cfg, params, state2, aux, prev_batch)
         metrics = {"loss": loss, "coherence_penalty": aux["coherence_penalty"],
                    "logit_p": aux["logit_p"], "logit_n": aux["logit_n"]}
+        if "route_overflow" in aux:
+            # budget-masked valid rows this step (docs/DISTRIBUTED.md
+            # §Budget) — zero unless cfg.shard_budget was tightened
+            metrics["route_overflow"] = aux["route_overflow"]
         return params, opt_state, state2, metrics
 
     return train_step
@@ -278,9 +305,31 @@ def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
     buffers, PRES trackers, APAN mailbox) are DONATED: XLA aliases the
     (N, D) buffers in place instead of allocating a fresh table per step
     (docs/SCAN.md §Donation). Callers must not reuse the opt_state/state
-    they passed in — only the returned ones."""
-    return jax.jit(make_step_body(cfg, opt, gru_fn=gru_fn),
+    they passed in — only the returned ones.
+
+    With cfg.n_shards > 1 the returned step additionally replicates the
+    per-step host inputs (batches, negatives) onto the mesh before the
+    jitted call — the carried params/opt_state/state are expected already
+    placed by routing.replicate/shard_state (docs/DISTRIBUTED.md)."""
+    step = jax.jit(make_step_body(cfg, opt, gru_fn=gru_fn),
                    donate_argnums=(1, 2))
+    return _replicating_inputs(cfg, step, n_carry=3)
+
+
+def _replicating_inputs(cfg: MDGNNConfig, step, n_carry: int):
+    """Wrap a jitted step so the non-carry (host-produced) arguments are
+    replicated onto the mesh — mixing freshly-sampled single-device arrays
+    with mesh-sharded carries in one jit is a placement error."""
+    if cfg.n_shards <= 1:
+        return step
+    from repro.train import routing
+
+    @functools.wraps(step)
+    def wrapped(*args):
+        carry, rest = args[:n_carry], args[n_carry:]
+        return step(*carry, *routing.replicate(rest, cfg.n_shards))
+
+    return wrapped
 
 
 def make_eval_step(cfg: MDGNNConfig):
@@ -290,6 +339,22 @@ def make_eval_step(cfg: MDGNNConfig):
         mem2, _, _, _ = memory_and_pres(params, cfg, state, prev_batch,
                                         gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
+        if cfg.n_shards > 1:
+            from repro.train import routing
+            state2 = dict(state2, neighbors=routing.sharded_neighbor_update(
+                cfg, state2["neighbors"], prev_batch))
+            embed_state = routing.natural_state_view(cfg, state2)
+            if cfg.variant == "apan":
+                nodes, times, msgs, mask = mdgnn.compute_messages(
+                    params, cfg, embed_state["memory"], prev_batch)
+                state2 = dict(state2, mailbox=routing.sharded_mailbox_update(
+                    cfg, state2["mailbox"], nodes, msgs, times, mask))
+                embed_state = dict(embed_state,
+                                   mailbox=routing.natural_component_view(
+                                       cfg, state2["mailbox"], "mailbox"))
+            logit_p, logit_n = endpoint_logits(params, cfg, embed_state,
+                                               pos, neg)
+            return state2, logit_p, logit_n
         state2 = dict(state2, neighbors=batching.update_neighbors(
             state2["neighbors"], prev_batch))
         if cfg.variant == "apan":
@@ -300,7 +365,7 @@ def make_eval_step(cfg: MDGNNConfig):
         logit_p, logit_n = endpoint_logits(params, cfg, state2, pos, neg)
         return state2, logit_p, logit_n
 
-    return jax.jit(eval_step)
+    return _replicating_inputs(cfg, jax.jit(eval_step), n_carry=2)
 
 
 @dataclasses.dataclass
@@ -309,6 +374,10 @@ class EpochResult:
     loss: float
     seconds: float
     aps: list
+    # sharded runs (cfg.n_shards > 1): epoch total of budget-masked routed
+    # rows — nonzero only when cfg.shard_budget was tightened below the
+    # overflow-free default (docs/DISTRIBUTED.md §Budget)
+    route_overflow: int = 0
 
 
 def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
@@ -321,7 +390,7 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     sync); logits are pulled to numpy as they arrive so device memory stays
     bounded at one step's worth."""
     t0 = time.perf_counter()
-    losses, pos_all, neg_all = [], [], []
+    losses, pos_all, neg_all, ovf = [], [], [], []
     it = iter(batches)
     try:
         prev_batch = next(it)
@@ -333,6 +402,8 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
             losses.append(m["loss"])                   # device scalar
             pos_all.append(np.asarray(m["logit_p"]))
             neg_all.append(np.asarray(m["logit_n"]))
+            if "route_overflow" in m:
+                ovf.append(m["route_overflow"])        # device scalar
             prev_batch = batch
     finally:
         # stop a PrefetchIterator's producer thread if the epoch aborts
@@ -345,7 +416,9 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     aps = [metrics_lib.average_precision(p, n) for p, n in zip(pos_all, neg_all)] \
         if collect_logits else []
     dt = time.perf_counter() - t0
-    return params, opt_state, state, EpochResult(ap, float(np.mean(losses)), dt, aps)
+    return params, opt_state, state, EpochResult(
+        ap, float(np.mean(losses)), dt, aps,
+        route_overflow=int(sum(int(x) for x in ovf)))
 
 
 def evaluate(params, state, batches, cfg: MDGNNConfig, eval_step, key, dst_range):

@@ -1,0 +1,156 @@
+"""One-epoch emulated-mesh training runner (docs/DISTRIBUTED.md §Emulated mesh).
+
+Runs a fixed synthetic workload for a given engine and shard count, then
+reports the final natural-layout model state, the train AP and the
+steady-state events/sec — the shared backend of the mesh parity suite
+(tests/test_distributed_mesh.py) and the scaling benchmark
+(benchmarks/fig_dist.py), which both spawn it in a SUBPROCESS with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=<N> \\
+    JAX_PLATFORMS=cpu PYTHONPATH=src \\
+    python -m repro.train.mesh_check --engine sequential --n-shards 4 ...
+
+because the forced host device count must be set before jax imports.
+
+The workload is deterministic in everything but the shard count: same
+synthetic stream, same init params/state, same per-step negative keys —
+so `--n-shards 1` vs `--n-shards K` isolates exactly the routing protocol
+(repro.train.routing) and its collectives.
+
+Prints one JSON line (ap, events_per_sec, route_overflow, ...) to stdout;
+`--out x.npz` additionally saves the final state + per-epoch APs for
+cross-process comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--engine", default="sequential",
+                    choices=["sequential", "pipelined", "scanned"])
+    ap.add_argument("--n-shards", type=int, default=1)
+    ap.add_argument("--shard-budget", type=int, default=None,
+                    help="static per-(sender, owner) routing-lane budget; "
+                         "default derives the overflow-free bound")
+    ap.add_argument("--variant", default="tgn",
+                    choices=["tgn", "jodie", "apan"])
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--users", type=int, default=50)
+    ap.add_argument("--items", type=int, default=30)
+    ap.add_argument("--events", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=75)
+    ap.add_argument("--d-mem", type=int, default=8)
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="depth used when --engine pipelined")
+    ap.add_argument("--scan-chunk", type=int, default=2,
+                    help="chunk used when --engine scanned")
+    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="npz path for the final "
+                    "natural-layout state + per-epoch APs")
+    return ap
+
+
+def _flat_state(state) -> dict:
+    """Final model state as {path: np.ndarray} with deterministic keys."""
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in leaves}
+
+
+def run(args) -> dict:
+    from repro.graph import datasets
+    from repro.models import mdgnn
+    from repro.models.mdgnn import MDGNNConfig
+    from repro.optim import adamw
+    from repro.train import loop, pipeline, routing, scan
+
+    spec = datasets.SyntheticSpec("mesh", args.users, args.items,
+                                  args.events, 8)
+    stream = datasets.generate(spec, seed=args.seed)
+    kw = dict(variant=args.variant, n_nodes=stream.num_nodes,
+              d_edge=stream.feat_dim, d_mem=args.d_mem, d_msg=args.d_mem,
+              d_time=8, d_embed=args.d_mem, n_neighbors=4, use_pres=True,
+              use_kernels=args.use_kernels, n_shards=args.n_shards,
+              shard_budget=args.shard_budget)
+    if args.engine == "pipelined":
+        kw["pipeline_depth"] = args.pipeline_depth
+    elif args.engine == "scanned":
+        kw["scan_chunk"] = args.scan_chunk
+    cfg = MDGNNConfig(**kw)
+
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(args.seed), cfg)
+    state = mdgnn.init_state(cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    if cfg.n_shards > 1:
+        state = routing.shard_state(cfg, state)
+        params, opt_state = routing.replicate((params, opt_state),
+                                              cfg.n_shards)
+    batches = stream.temporal_batches(args.batch)
+    dst_range = (spec.n_users, spec.n_users + spec.n_items)
+
+    if args.engine == "scanned":
+        engine = scan.ScanEngine(cfg, opt)
+
+        def run_one(params, opt_state, state, sub):
+            return engine.run_epoch(params, opt_state, state, batches,
+                                    sub, dst_range)
+    else:
+        step = pipeline.make_train_step(cfg, opt)
+
+        def run_one(params, opt_state, state, sub):
+            return pipeline.run_epoch(params, opt_state, state, batches,
+                                      cfg, step, sub, dst_range)
+
+    key = jax.random.PRNGKey(7)
+    aps, secs, overflow = [], [], 0
+    for _ in range(args.epochs):
+        key, sub = jax.random.split(key)
+        params, opt_state, state, res = run_one(params, opt_state, state, sub)
+        aps.append(res.ap)
+        secs.append(res.seconds)
+        overflow += res.route_overflow
+
+    if cfg.n_shards > 1:
+        state = routing.unshard_state(cfg, state)
+    events_per_epoch = (len(batches) - 1) * args.batch
+    # min over epochs: the first epoch pays the compile, so with
+    # --epochs >= 2 this is the steady-state throughput
+    report = {
+        "engine": args.engine, "n_shards": args.n_shards,
+        "variant": args.variant, "use_kernels": bool(args.use_kernels),
+        "devices": len(jax.devices()),
+        "events_per_epoch": events_per_epoch,
+        "epoch_seconds": [round(s, 4) for s in secs],
+        "events_per_sec": round(events_per_epoch / min(secs), 2),
+        "ap": float(aps[-1]),
+        "aps": [float(a) for a in aps],
+        "route_overflow": overflow,
+    }
+    if args.out:
+        np.savez(args.out, __ap=np.asarray(aps, np.float64),
+                 **_flat_state(state))
+    return report
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    if args.n_shards > len(jax.devices()):
+        sys.exit(f"n_shards={args.n_shards} needs XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count={args.n_shards} "
+                 f"set before jax imports (docs/DISTRIBUTED.md)")
+    report = run(args)
+    print(json.dumps(report))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -157,14 +157,28 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
             params, cfg, state, prev_batch, gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         # ------------------------------- staleness accounting + read view --
+        # Sharded runs (cfg.n_shards > 1): the snapshot lives in NATURAL
+        # layout — the shard exchange happens in the live MEMORY stage
+        # above, while the embedding reads this replicated stale snapshot,
+        # so the exchange and the embed overlap (docs/DISTRIBUTED.md
+        # §Pipelined overlap). Only the refresh (every pipeline_depth
+        # steps) gathers the live sharded table.
+        if cfg.n_shards > 1:
+            from repro.train import routing
+            live_mem = routing.natural_memory(cfg, mem2)
+            embed_base = routing.natural_state_view(cfg, state2)
+            pres_nat = routing.natural_component_view(cfg, state["pres"],
+                                                      "pres")
+        else:
+            live_mem, embed_base, pres_nat = mem2, state2, state["pres"]
         occ = jax.ops.segment_sum(
             info["mask"].astype(jnp.float32),
             jnp.where(info["mask"], info["nodes"], cfg.n_nodes),
             num_segments=cfg.n_nodes + 1)[:-1]
         pstate = dataclasses.replace(pstate, pending=pstate.pending + occ)
-        read_tab = stale_read_table(cfg, state["pres"], pstate,
-                                    mem2.last_update)
-        embed_state = dict(state2, memory=MemoryState(
+        read_tab = stale_read_table(cfg, pres_nat, pstate,
+                                    live_mem.last_update)
+        embed_state = dict(embed_base, memory=MemoryState(
             mem=read_tab, last_update=pstate.read_last_update))
         # --------------------------------------- EMBEDDING stage (stale) --
         logit_p, logit_n = loop_lib.endpoint_logits(params, cfg, embed_state,
@@ -178,8 +192,8 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
         # ------------------------------------------- snapshot refresh lag --
         refresh = (pstate.tick + 1) >= cfg.pipeline_depth
         pstate2 = PipelineState(
-            read_mem=jnp.where(refresh, mem2.mem, pstate.read_mem),
-            read_last_update=jnp.where(refresh, mem2.last_update,
+            read_mem=jnp.where(refresh, live_mem.mem, pstate.read_mem),
+            read_last_update=jnp.where(refresh, live_mem.last_update,
                                        pstate.read_last_update),
             pending=jnp.where(refresh, 0.0, pstate.pending),
             tick=jnp.where(refresh, 0, pstate.tick + 1).astype(jnp.int32),
@@ -191,6 +205,8 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
             "info_nodes": info["nodes"], "info_selected": info["selected"],
             "info_mask": info["mask"],
         }
+        if "route_overflow" in info:
+            aux["route_overflow"] = info["route_overflow"]
         return loss, (state2, pstate2, aux)
 
     def train_step(params, opt_state, state, pstate, prev_batch, pos, neg):
@@ -207,12 +223,15 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
                    # batch-writes missing from the snapshot THIS step's embed
                    # read (incl. the current in-flight write): in [1, K]
                    "staleness": pstate.tick + 1}
+        if "route_overflow" in aux:
+            metrics["route_overflow"] = aux["route_overflow"]
         return params, opt_state, state2, pstate2, metrics
 
     # donate the carry buffers (opt state, model state, snapshot) so XLA
     # aliases the (N, D) tables in place — same contract as the sequential
     # and scanned steps (docs/SCAN.md §Donation)
-    return jax.jit(train_step, donate_argnums=(1, 2, 3))
+    return loop_lib._replicating_inputs(
+        cfg, jax.jit(train_step, donate_argnums=(1, 2, 3)), n_carry=4)
 
 
 def make_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
@@ -242,8 +261,15 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
                                   train_step, key, dst_range,
                                   collect_logits=collect_logits)
     t0 = time.perf_counter()
-    pstate = PipelineState.init(state["memory"])
-    losses, pos_all, neg_all = [], [], []
+    if cfg.n_shards > 1:
+        # the snapshot lives in natural layout (see make_pipelined_train_step)
+        from repro.train import routing
+        mem0 = jax.jit(lambda m: routing.natural_memory(cfg, m))(
+            state["memory"])
+        pstate = routing.replicate(PipelineState.init(mem0), cfg.n_shards)
+    else:
+        pstate = PipelineState.init(state["memory"])
+    losses, pos_all, neg_all, ovf = [], [], [], []
     it = iter(batches)
     try:
         prev_batch = next(it)
@@ -255,6 +281,8 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
             losses.append(m["loss"])
             pos_all.append(m["logit_p"])
             neg_all.append(m["logit_n"])
+            if "route_overflow" in m:
+                ovf.append(m["route_overflow"])
             prev_batch = batch
     finally:
         # stop a PrefetchIterator's producer thread if the epoch aborts
@@ -271,4 +299,5 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
            for p, n in zip(pos_all, neg_all)] if collect_logits else []
     dt = time.perf_counter() - t0
     return params, opt_state, state, loop_lib.EpochResult(
-        ap, float(np.mean(losses)), dt, aps)
+        ap, float(np.mean(losses)), dt, aps,
+        route_overflow=int(sum(int(x) for x in ovf)))

@@ -91,7 +91,10 @@ def make_macro_step(cfg: MDGNNConfig, opt, dst_range, gru_fn=None):
             step, (params, opt_state, state, key), (prevs, poss))
         return params, opt_state, state, key, metrics
 
-    return jax.jit(macro_step, donate_argnums=(1, 2))
+    # sharded runs: replicate the host-produced key/macro onto the mesh
+    # before the jitted call (the carries are already mesh-placed)
+    return loop_lib._replicating_inputs(
+        cfg, jax.jit(macro_step, donate_argnums=(1, 2)), n_carry=3)
 
 
 class ScanEngine:
@@ -139,7 +142,7 @@ class ScanEngine:
                                       collect_logits=collect_logits)
         t0 = time.perf_counter()
         step = self._macro_step(tuple(dst_range))
-        losses, pos_all, neg_all = [], [], []
+        losses, pos_all, neg_all, ovf = [], [], [], []
         it = iter_macro_batches(batches, self.cfg.scan_chunk)
         try:
             for macro in it:
@@ -148,6 +151,8 @@ class ScanEngine:
                 losses.append(m["loss"])              # (T,) device
                 pos_all.append(np.asarray(m["logit_p"]))   # (T, b)
                 neg_all.append(np.asarray(m["logit_n"]))
+                if "route_overflow" in m:
+                    ovf.append(m["route_overflow"])   # (T,) device
         finally:
             close = getattr(it, "close", None)
             if close is not None:
@@ -161,4 +166,6 @@ class ScanEngine:
                for p, n in zip(pos_rows, neg_rows)] if collect_logits else []
         dt = time.perf_counter() - t0
         return params, opt_state, state, loop_lib.EpochResult(
-            ap, float(np.mean(losses)), dt, aps)
+            ap, float(np.mean(losses)), dt, aps,
+            route_overflow=int(sum(int(np.sum(np.asarray(x)))
+                                   for x in ovf)))

@@ -8,6 +8,8 @@ tests to SKIPPED instead of erroring at collection. `pip install -r
 requirements-dev.txt` restores the full property-test sweep."""
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import pytest
 
@@ -15,6 +17,33 @@ import jax
 
 from repro.graph import datasets
 from repro.graph.events import EventStream
+
+
+@pytest.fixture(autouse=True)
+def _kernel_policy_isolation():
+    """Keep the kernel execution policy order-independent across tests.
+
+    The dispatch chain (docs/KERNELS.md §Execution policy) memoizes two
+    process-global pieces of state: the validated REPRO_KERNELS_MODE env
+    lookup (`ops._env_mode`, lru_cached) and the on-disk autotune-cache
+    entries (`autotune._file_entries`, loaded once per process). A test
+    that sets the env var or writes a cache file would otherwise leak its
+    policy into every later test — visibly order-dependent under
+    `pytest -p no:randomly` vs randomized runs. Restore the env var and
+    drop both memos after every test. (`ops._oracle_fn` is deliberately
+    NOT cleared: the jitted oracles are pure functions of their static
+    kwargs, and re-jitting them per test would dominate the suite.)"""
+    before = os.environ.get("REPRO_KERNELS_MODE")
+    yield
+    if os.environ.get("REPRO_KERNELS_MODE") != before:
+        if before is None:
+            os.environ.pop("REPRO_KERNELS_MODE", None)
+        else:
+            os.environ["REPRO_KERNELS_MODE"] = before
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
+    kops._env_mode.cache_clear()
+    autotune.clear_cache()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,285 @@
+"""Property tests for the cross-shard routing plan (repro.train.routing).
+
+The protocol's correctness reduces to three invariants of
+bucket_plan/bucket_scatter/bucket_gather around a (simulated) tiled
+all_to_all:
+
+* permutation — the route -> all_to_all -> unroute round trip neither
+  drops, duplicates, nor misdelivers a row: every kept occurrence lands
+  exactly once, on its owner shard, payload intact;
+* order robustness — the delivered SET is invariant to within-batch event
+  order, and the round trip stays an identity on kept rows under any
+  permutation (ranks shift, destinations don't);
+* no silent truncation — sum(kept) + overflow == sum(valid) for every
+  budget, with the overflow count surfaced (never just masked away).
+
+The all_to_all here is the host-side definition of the tiled collective
+(receiver d = concat over senders s of send_s[d*budget:(d+1)*budget], in
+sender order) — the emulated-mesh suite (tests/test_distributed_mesh.py)
+covers the real one. Hypothesis widens the sweep when installed; the
+deterministic seeds below run everywhere.
+
+Also here: single-device-mesh checks that sharded_memory_and_pres matches
+loop.memory_and_pres through the full protocol (n_shards=1 runs every
+phase with degenerate collectives) and that tightening cfg.shard_budget
+surfaces route_overflow in info.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.train import loop, routing
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Host-side protocol simulation
+# ---------------------------------------------------------------------------
+
+
+def _simulate(nodes, valid, n_shards, budget, payload):
+    """route -> tiled all_to_all -> owner view -> reverse -> unroute.
+
+    Returns (delivered, overflow_total, roundtrip) where `delivered` is a
+    list per owner shard of (payload_row, src_valid) received rows and
+    `roundtrip` is the payload routed out and gathered back in batch
+    order (fill = -1 for rows that never shipped)."""
+    m = nodes.shape[0]
+    assert m % n_shards == 0
+    ms = m // n_shards
+    sends, vsends, plans, overflow = [], [], [], 0
+    for s in range(n_shards):
+        sl = slice(s * ms, (s + 1) * ms)
+        owner = jnp.asarray(nodes[sl] % n_shards)
+        slot, rank, kept, ovf = routing.bucket_plan(
+            owner, jnp.asarray(valid[sl]), n_shards, budget)
+        sends.append(np.asarray(routing.bucket_scatter(
+            jnp.asarray(payload[sl]), slot, n_shards, budget, fill=-1)))
+        vsends.append(np.asarray(routing.bucket_scatter(
+            kept, slot, n_shards, budget, fill=False)))
+        plans.append((np.asarray(owner), np.asarray(rank), np.asarray(kept)))
+        overflow += int(ovf)
+    # tiled all_to_all: receiver d's buffer is the senders' d-th lanes,
+    # concatenated in sender order
+    recv = [np.concatenate([sends[s][d * budget:(d + 1) * budget]
+                            for s in range(n_shards)])
+            for d in range(n_shards)]
+    recv_v = [np.concatenate([vsends[s][d * budget:(d + 1) * budget]
+                              for s in range(n_shards)])
+              for d in range(n_shards)]
+    delivered = [list(zip(recv[d][recv_v[d]], np.flatnonzero(recv_v[d])))
+                 for d in range(n_shards)]
+    # reverse all_to_all of the received buffers + bucket_gather
+    back = []
+    for s in range(n_shards):
+        flat = np.concatenate([recv[d][s * budget:(s + 1) * budget]
+                               for d in range(n_shards)])
+        owner, rank, kept = plans[s]
+        back.append(np.asarray(routing.bucket_gather(
+            jnp.asarray(flat), jnp.asarray(owner), jnp.asarray(rank),
+            budget, jnp.asarray(kept), fill=-1)))
+    return delivered, overflow, np.concatenate(back)
+
+
+def _random_case(rng, n_shards, m_per_shard, n_nodes, p_valid=0.8):
+    m = n_shards * m_per_shard
+    nodes = rng.integers(0, n_nodes, size=m).astype(np.int32)
+    valid = rng.random(m) < p_valid
+    payload = np.arange(m, dtype=np.int32)  # globally unique row ids
+    return nodes, valid, payload
+
+
+def _check_roundtrip(nodes, valid, payload, n_shards, budget=None):
+    m = nodes.shape[0]
+    ms = m // n_shards
+    if budget is None:
+        budget = ms                      # the overflow-free default
+    delivered, overflow, roundtrip = _simulate(nodes, valid, n_shards,
+                                               budget, payload)
+    # --- no silent truncation: kept + overflow exhausts the valid rows ---
+    n_delivered = sum(len(d) for d in delivered)
+    assert n_delivered + overflow == int(valid.sum())
+    # --- no duplication, no misdelivery, payload integrity --------------
+    pos_of = {int(payload[i]): i for i in range(m)}   # payloads are unique
+    seen = set()
+    for d, rows in enumerate(delivered):
+        for row, _slot in rows:
+            i = pos_of[int(row)]
+            assert i not in seen, "duplicated row"
+            seen.add(i)
+            assert nodes[i] % n_shards == d, "misdelivered row"
+    # --- round trip is the identity on every delivered row --------------
+    for i in range(m):
+        if i in seen:
+            assert roundtrip[i] == payload[i]
+        else:
+            assert roundtrip[i] == -1
+    return overflow, seen
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_route_roundtrip_is_permutation(n_shards, seed):
+    """Default budget: every valid row delivered exactly once to its owner
+    and gathered back intact — zero overflow."""
+    rng = np.random.default_rng(seed)
+    nodes, valid, payload = _random_case(rng, n_shards, 24, n_nodes=17)
+    overflow, seen = _check_roundtrip(nodes, valid, payload, n_shards)
+    assert overflow == 0
+    assert len(seen) == int(valid.sum())
+
+
+@pytest.mark.parametrize("budget", [1, 2, 5, 8])
+def test_overflow_never_silently_truncates(budget):
+    """Tight budgets: the invariant sum(kept) + overflow == sum(valid)
+    holds for every budget, and a positive overflow is reported whenever a
+    lane exceeds it."""
+    rng = np.random.default_rng(3)
+    n_shards = 4
+    nodes, valid, payload = _random_case(rng, n_shards, 16, n_nodes=5)
+    overflow, seen = _check_roundtrip(nodes, valid, payload, n_shards,
+                                      budget=budget)
+    # per-(sender, owner) lane loads give the exact expected overflow
+    expect = 0
+    for s in range(n_shards):
+        sl = slice(s * 16, (s + 1) * 16)
+        for d in range(n_shards):
+            load = int(((nodes[sl] % n_shards) == d)[valid[sl]].sum())
+            expect += max(0, load - budget)
+    assert overflow == expect
+    if expect > 0:
+        assert overflow > 0                      # surfaced, not masked
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_within_batch_order_invariance(seed):
+    """Permuting rows within each sender slice (destinations unchanged)
+    delivers the same SET of rows, and the round trip stays an identity —
+    the stable ranks shift, the routing does not."""
+    rng = np.random.default_rng(seed)
+    n_shards = 4
+    nodes, valid, payload = _random_case(rng, n_shards, 20, n_nodes=13)
+    _, base_seen = _check_roundtrip(nodes, valid, payload, n_shards)
+    perm = np.concatenate([s * 20 + rng.permutation(20)
+                           for s in range(n_shards)])
+    _, perm_seen = _check_roundtrip(nodes[perm], valid[perm], payload[perm],
+                                    n_shards)
+    assert {int(payload[perm][i]) for i in perm_seen} == \
+        {int(payload[i]) for i in base_seen}
+
+
+def test_bucket_plan_ranks_are_pad_invariant():
+    """Masked rows never perturb the ranks of valid ones (the same
+    guarantee batching.ring_buffer_append provides): interleaving padding
+    rows leaves each valid row's (owner, rank) pair unchanged."""
+    nodes = jnp.asarray([3, 1, 3, 2, 3, 1], jnp.int32)
+    valid = jnp.asarray([True] * 6)
+    slot0, rank0, kept0, _ = routing.bucket_plan(nodes % 4, valid, 4, 6)
+    # interleave padding (invalid) rows at the front and middle
+    nodes_p = jnp.asarray([0, 3, 1, 0, 3, 2, 3, 1], jnp.int32)
+    valid_p = jnp.asarray([False, True, True, False, True, True, True, True])
+    slot_p, rank_p, kept_p, _ = routing.bucket_plan(nodes_p % 4, valid_p, 4, 6)
+    live = np.flatnonzero(np.asarray(valid_p))
+    np.testing.assert_array_equal(np.asarray(rank_p)[live], np.asarray(rank0))
+    np.testing.assert_array_equal(np.asarray(slot_p)[live], np.asarray(slot0))
+    assert bool(np.all(np.asarray(kept_p)[live] == np.asarray(kept0)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 12), st.integers(1, 24),
+           st.data())
+    def test_route_roundtrip_property(n_shards, m_per_shard, n_nodes, data):
+        m = n_shards * m_per_shard
+        nodes = np.asarray(data.draw(st.lists(
+            st.integers(0, n_nodes - 1), min_size=m, max_size=m)), np.int32)
+        valid = np.asarray(data.draw(st.lists(
+            st.booleans(), min_size=m, max_size=m)))
+        budget = data.draw(st.integers(1, m_per_shard))
+        payload = np.arange(m, dtype=np.int32)
+        _check_roundtrip(nodes, valid, payload, n_shards, budget=budget)
+
+
+# ---------------------------------------------------------------------------
+# Layout round trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 7])
+def test_shard_layout_roundtrip(n_shards):
+    """from_shard_layout inverts to_shard_layout for every (rows, shards),
+    including non-divisible row counts (the padded tail)."""
+    rng = np.random.default_rng(0)
+    for n_rows in [1, 5, 12, 40]:
+        x = rng.standard_normal((n_rows, 3)).astype(np.float32)
+        permuted = routing.to_shard_layout(x, n_rows, n_shards)
+        assert permuted.shape[0] == routing.padded_rows(n_rows, n_shards)
+        np.testing.assert_array_equal(
+            routing.from_shard_layout(permuted, n_rows, n_shards), x)
+    # phys_index is injective over the live ids
+    idx = np.asarray(routing.phys_index(np.arange(40), 40, n_shards))
+    assert len(set(idx.tolist())) == 40
+
+
+# ---------------------------------------------------------------------------
+# Full protocol on the degenerate 1-device mesh (runs in-process)
+# ---------------------------------------------------------------------------
+
+
+def _cfg(stream, **kw):
+    base = dict(variant="tgn", n_nodes=stream.num_nodes,
+                d_edge=stream.feat_dim, d_mem=16, d_msg=16, d_time=8,
+                d_embed=16, n_neighbors=4, use_pres=True, n_shards=1)
+    base.update(kw)
+    return MDGNNConfig(**base)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_single_shard_protocol_matches_loop(tiny_stream, use_kernels):
+    """n_shards=1 exercises every phase of the routing protocol (request
+    gather, message, route, owner update, unroute) with degenerate
+    collectives — its output must equal loop.memory_and_pres exactly."""
+    cfg = _cfg(tiny_stream, use_kernels=use_kernels)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    prev = tiny_stream.temporal_batches(100)[0]
+    mem_r, info_r, fused_r, delta_r = jax.jit(
+        lambda p, s: loop.memory_and_pres(p, cfg, s, prev))(params, state)
+    mem_s, info_s, fused_s, delta_s = jax.jit(
+        lambda p, s: routing.sharded_memory_and_pres(p, cfg, s, prev))(
+            params, state)
+    np.testing.assert_allclose(np.asarray(mem_r.mem), np.asarray(mem_s.mem),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused_r), np.asarray(fused_s),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(delta_r), np.asarray(delta_s),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(info_r["selected"]),
+                                  np.asarray(info_s["selected"]))
+    assert int(info_s["route_overflow"]) == 0
+
+
+def test_tight_budget_surfaces_overflow(tiny_stream):
+    """cfg.shard_budget below the lane load: the masked rows are COUNTED in
+    info["route_overflow"] — exactly sum(valid) - sum(kept) — instead of
+    disappearing."""
+    cfg = _cfg(tiny_stream, shard_budget=3)
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    state = mdgnn.init_state(cfg)
+    prev = tiny_stream.temporal_batches(100)[0]
+    _, info, _, _ = jax.jit(
+        lambda p, s: routing.sharded_memory_and_pres(p, cfg, s, prev))(
+            params, state)
+    n_valid = int(np.asarray(prev.mask).sum()) * 2   # src + dst occurrences
+    assert int(info["route_overflow"]) == n_valid - 3
