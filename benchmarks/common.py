@@ -63,13 +63,14 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
               pres_scale="count", delta_mode="transition",
               use_smoothing=None, collect_per_batch=False,
               d_mem=32, n_layers=1, n_heads=2,
-              use_kernels=False, pipeline_depth=0,
+              use_kernels=False, dedup_embed=True, pipeline_depth=0,
               host_prefetch=False, scan_chunk=1,
               dst_range=None) -> RunResult:
     cfg = MDGNNConfig(
         variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
         n_layers=n_layers, n_heads=n_heads, use_kernels=use_kernels,
+        dedup_embed=dedup_embed,
         use_pres=use_pres, use_smoothing=use_smoothing, beta=beta,
         pres_scale=pres_scale, delta_mode=delta_mode,
         pipeline_depth=pipeline_depth, scan_chunk=scan_chunk)

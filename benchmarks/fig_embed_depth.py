@@ -1,55 +1,148 @@
 """Embedding-depth sweep: throughput + AP for the L-hop attention stack.
 
-Sweeps layers x temporal batch size x Pallas-kernel routing for the TGN-PRES
-model (the registry's `tgn_attn` embedding, docs/DESIGN.md §Embedding
-stack) and reports steady-state events/sec, compile time, and final AP.
-The layers=1 rows reproduce the historical 1-hop engine; layers=2 is the
-TGL/DistTGL production depth the multi-layer refactor unlocks.
+Sweeps layers x temporal batch size x frontier dedup x Pallas-kernel
+routing for the TGN-PRES model (the registry's `tgn_attn` embedding,
+docs/DESIGN.md §Embedding stack) and reports steady-state events/sec,
+compile time, and final AP. dedup=1 rows run the unique-frontier
+compaction (core/batching.py::expand_frontiers_unique — hop d holds a
+unique (node, time) table instead of the seed M*K^d expansion); dedup=0
+rows are the seed path. Each row carries the measured frontier dedup
+ratio (unique rows / raw rows, summed over hops) for its (batch, layers)
+point, probed on warmed ring buffers over endpoint-style seeds.
 
-On this CPU container the kernel rows run in interpret mode, so their
-timings measure plumbing, not Mosaic performance — the interesting CPU
-numbers are the layers scaling and the kernel-path AP parity (allclose to
-the reference path).
+On this CPU container the kernel rows route to the jitted oracle, so
+their timings measure the dispatch plumbing, not Mosaic performance —
+the interesting CPU numbers are the dedup-vs-seed scaling at depth 2
+(where the seed path materialises M*K^2 rows) and AP parity across all
+four path combinations.
+
+`--tiny` is the CI embed-perf gate: one depth-1 and one depth-2 point on
+a short stream, asserting dedup-on >= 1.0x dedup-off events/sec at depth
+2 and kernels-on >= 0.75x kernels-off at every point.
 """
 from __future__ import annotations
 
+import argparse
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
 
 
-def run(fast: bool = False, seeds: int | None = None):
-    n_events = 2000 if fast else 6000
-    epochs = 1 if fast else 2
+def frontier_stats(stream, spec, batch_size: int, n_hops: int) -> dict:
+    """Measured dedup ratios for endpoint-style seeds on warmed rings.
+
+    Replays the first half of the stream through the neighbour ring
+    buffers, then probes `frontier_dedup_stats` on the seed layout the
+    training step actually embeds: concat([pos.src, pos.dst, neg.src,
+    neg.dst]) at the batch times (src doubles as its own corruption
+    source, matching loop.endpoint_logits's M = 4B frontier).
+    """
+    from repro.core import batching
+    from repro.graph.negatives import sample_negatives
+
+    n_nodes = stream.num_nodes
+    nbrs = batching.init_neighbors(n_nodes, k=8)
+    batches = stream.temporal_batches(batch_size)
+    warm = batches[: max(1, len(batches) // 2)]
+    for b in warm:
+        nbrs = batching.update_neighbors(nbrs, b)
+    probe = batches[len(warm)]
+    neg = sample_negatives(jax.random.PRNGKey(0), probe,
+                           spec.n_users, spec.n_users + spec.n_items)
+    nodes = jnp.concatenate([probe.src, probe.dst, neg.src, neg.dst])
+    t = jnp.concatenate([probe.t, probe.t, neg.t, neg.t])
+    return batching.frontier_dedup_stats(nbrs, nodes, t, n_hops, n_nodes)
+
+
+def run(fast: bool = False, tiny: bool = False, seeds: int | None = None):
+    # tiny uses batch 400: the M = 4B endpoint frontier (1600 seeds) is 3x
+    # the 520-node graph, so the unique tables saturate and the depth-2
+    # seed expansion (M*K^2 = 102400 rows) pays for the compaction sorts
+    n_events = 2400 if tiny else (2000 if fast else 6000)
+    epochs = 3 if tiny else (1 if fast else 2)
     n_seeds = seeds or 1
     stream, spec = common.bench_stream(n_events=n_events)
+    batch_sizes = (400,) if tiny else ((200,) if fast else (100, 400))
     rows = []
     for n_layers in (1, 2):
-        for batch_size in ((200,) if fast else (100, 400)):
-            for use_kernels in (False, True):
-                secs, comps, aps = [], [], []
-                for seed in range(n_seeds):
-                    res = common.train_run(
-                        stream, spec, variant="tgn", use_pres=True,
-                        batch_size=batch_size, epochs=epochs, seed=seed,
-                        n_layers=n_layers, use_kernels=use_kernels)
-                    secs.append(float(np.mean(res.epoch_seconds)))
-                    comps.append(res.compile_seconds)
-                    aps.append(res.aps[-1])
-                sec = float(np.mean(secs))
-                rows.append({
-                    "layers": n_layers,
-                    "batch_size": batch_size,
-                    "kernels": int(use_kernels),
-                    "events_per_sec": (len(stream) / sec) if sec > 0 else 0.0,
-                    "ms_per_dispatch": common.ms_per_dispatch(
-                        sec, res.dispatches_per_epoch),
-                    "epoch_seconds": sec,
-                    "compile_seconds": float(np.mean(comps)),
-                    "final_ap": float(np.mean(aps)),
-                })
+        for batch_size in batch_sizes:
+            stats = frontier_stats(stream, spec, batch_size, n_layers)
+            for dedup in (False, True):
+                for use_kernels in (False, True):
+                    secs, comps, aps = [], [], []
+                    for seed in range(n_seeds):
+                        res = common.train_run(
+                            stream, spec, variant="tgn", use_pres=True,
+                            batch_size=batch_size, epochs=epochs, seed=seed,
+                            n_layers=n_layers, use_kernels=use_kernels,
+                            dedup_embed=dedup)
+                        # min over epochs: the steady-state floor (the CI
+                        # gate compares these, so shave scheduler noise)
+                        secs.append(float(np.min(res.epoch_seconds)))
+                        comps.append(res.compile_seconds)
+                        aps.append(res.aps[-1])
+                    sec = float(np.mean(secs))
+                    rows.append({
+                        "layers": n_layers,
+                        "batch_size": batch_size,
+                        "dedup": int(dedup),
+                        "kernels": int(use_kernels),
+                        "events_per_sec": (len(stream) / sec) if sec > 0
+                                          else 0.0,
+                        "ms_per_dispatch": common.ms_per_dispatch(
+                            sec, res.dispatches_per_epoch),
+                        "epoch_seconds": sec,
+                        "compile_seconds": float(np.mean(comps)),
+                        "final_ap": float(np.mean(aps)),
+                        "dedup_budget_ratio": stats["budget_ratio"],
+                        "dedup_measured_ratio": stats["measured_ratio"],
+                    })
     common.emit("fig_embed_depth", rows)
+    return rows
+
+
+def _gate(rows):
+    """CI assertions for --tiny (ci.yml embed-perf): compaction must not
+    lose throughput where the seed expansion blows up (depth 2), and the
+    kernel routing must stay within plumbing overhead of the jnp path."""
+    def pick(**kv):
+        sel = [r for r in rows
+               if all(r[k] == v for k, v in kv.items())]
+        assert len(sel) == 1, (kv, len(sel))
+        return sel[0]
+
+    d2_on = pick(layers=2, dedup=1, kernels=0)
+    d2_off = pick(layers=2, dedup=0, kernels=0)
+    ratio = d2_on["events_per_sec"] / max(d2_off["events_per_sec"], 1e-9)
+    print(f"[gate] depth-2 dedup-on/off events/sec = {ratio:.3f} "
+          f"(measured frontier ratio {d2_on['dedup_measured_ratio']:.3f})")
+    assert ratio >= 1.0, (
+        f"dedup-on slower than seed expansion at depth 2: {ratio:.3f}x")
+    for layers in (1, 2):
+        k_on = pick(layers=layers, dedup=1, kernels=1)
+        k_off = pick(layers=layers, dedup=1, kernels=0)
+        kr = k_on["events_per_sec"] / max(k_off["events_per_sec"], 1e-9)
+        print(f"[gate] layers={layers} kernels-on/off = {kr:.3f}")
+        assert kr >= 0.75, (
+            f"kernel routing overhead too high at layers={layers}: {kr:.3f}x")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI embed-perf mode: smallest sweep + throughput "
+                         "gates (dedup >= seed at depth 2; kernels within "
+                         "0.75x)")
+    ap.add_argument("--seeds", type=int, default=None)
+    args = ap.parse_args(argv)
+    rows = run(fast=args.fast, tiny=args.tiny, seeds=args.seeds)
+    if args.tiny:
+        _gate(rows)
 
 
 if __name__ == "__main__":
-    run()
+    main()

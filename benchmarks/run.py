@@ -10,7 +10,8 @@ consolidation (EXPERIMENTS.md §Roofline reads results/bench/*.json).
   fig16_extended   Fig. 16     extended training closes small AP gaps
   fig17_ablation   Fig. 17     PRES-S / PRES-V / full / paper-literal scale
   buckets_ablation Sec. 5.3    AP vs anchor-bucket count (tracker squeeze)
-  fig_embed_depth  (engine)    events/sec: embed layers x batch x kernels
+  fig_embed_depth  (engine)    events/sec: embed layers x batch x frontier
+                               dedup x kernels (+ measured dedup ratio)
   fig_pipeline     (engine)    events/sec + AP: pipeline_depth 0/1/2/4 vs
                                the sequential baseline (docs/PIPELINE.md)
   fig_kernels      (kernels)   memory-update path per-kernel timings +

@@ -46,6 +46,9 @@ BLOCK_CANDIDATES: dict[str, tuple[int, ...]] = {
     "block_m": (64, 128, 256, 512),
     "block_b": (16, 32, 64),
     "block_i": (64, 128, 256),
+    # embed_attn: neighbour slots gathered per grid step (K is padded to a
+    # multiple, so every candidate is valid at every K)
+    "block_k": (1, 2, 4, 8),
 }
 
 

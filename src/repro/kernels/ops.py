@@ -35,6 +35,7 @@ from typing import Any, Callable, Mapping
 
 import jax
 
+from repro.kernels import embed_attn as _ea
 from repro.kernels import flash_attn as _fa
 from repro.kernels import gru_cell as _gru
 from repro.kernels import link_score as _ls
@@ -155,8 +156,13 @@ _register(KernelSpec(
     doc="pairwise link-decoder scores (serve recommend-topk, VMEM hidden)"))
 _register(KernelSpec(
     name="neighbor_attn", impl=_nattn.neighbor_attn,
-    ref=ref.neighbor_attn_ref, blocks={}, impl_only=("block_m",),
+    ref=ref.neighbor_attn_ref, blocks={"block_m": 128},
     doc="TGN temporal neighbour attention (softmax stays in VMEM)"))
+_register(KernelSpec(
+    name="embed_attn", impl=_ea.embed_attn, ref=ref.embed_attn_ref,
+    blocks={"block_k": 1},
+    doc="dedup-frontier embedding layer: unique-table gather + time-encode "
+        "+ QKV + masked softmax in one pass (docs/KERNELS.md §embed_attn)"))
 _register(KernelSpec(
     name="ssd_chunk", impl=_ssd.ssd_chunk, ref=ref.ssd_chunk_ref,
     blocks={}, oracle=_ssd_chunk_oracle,
@@ -263,6 +269,14 @@ def link_score(h_src, h_items, w1, b1, w2, b2, **kw):
 
 def neighbor_attn(q, k, v, valid, **kw):
     return dispatch("neighbor_attn", q, k, v, valid, **kw)
+
+
+def embed_attn(h_self, tab, idx, dt, valid, tw, tb, wq, wk, wv, **kw):
+    """Fused dedup-frontier embedding layer: gather each row's K neighbour
+    hidden rows from the unique table at idx, time-encode, project Q/K/V,
+    masked multi-head softmax — one pass (docs/KERNELS.md §embed_attn)."""
+    return dispatch("embed_attn", h_self, tab, idx, dt, valid, tw, tb,
+                    wq, wk, wv, **kw)
 
 
 def ssd_chunk(q, k, v, lcum, h0, **kw):

@@ -108,6 +108,43 @@ def neighbor_attn_ref(q, k, v, valid):
     return jnp.einsum("mk,mke->me", probs.astype(q.dtype), v)
 
 
+def embed_attn_ref(h_self, tab, idx, dt, valid, tw, tb, wq, wk, wv,
+                   n_heads=1):
+    """Fused deduplicated embedding layer (the compacted-frontier inner
+    loop, docs/KERNELS.md §embed_attn): gather each row's K neighbour
+    hidden states from the unique table, time-encode, project Q/K/V, and
+    run the masked multi-head neighbour attention.
+
+    h_self: (R, Din_self) parent hidden rows; tab: (U, Din) child unique
+    table; idx: (R, K) int32 inverse indices into tab; dt/valid: (R, K);
+    tw/tb: (d_time,) time-encoder params; wq: (Din_self, E);
+    wk/wv: (Din + d_time, E). Returns the aggregated heads (R, E) — the
+    caller applies the output projection.
+
+    The head fold mirrors embeddings.neighbor_attention exactly so both
+    routes share this single-head inner loop (neighbor_attn_ref)."""
+    r, kk = valid.shape
+    h_nbr = tab[idx.reshape(-1)].reshape(r, kk, -1)
+    t_enc = jnp.cos(dt[..., None] * tw + tb)
+    kv = jnp.concatenate([h_nbr, t_enc], axis=-1)
+    q = h_self @ wq
+    k = kv @ wk
+    v = kv @ wv
+    e = q.shape[-1]
+    if n_heads > 1:
+        dh = e // n_heads
+        q = q.reshape(r * n_heads, dh)
+        k = (k.reshape(r, kk, n_heads, dh).swapaxes(1, 2)
+             .reshape(r * n_heads, kk, dh))
+        v = (v.reshape(r, kk, n_heads, dh).swapaxes(1, 2)
+             .reshape(r * n_heads, kk, dh))
+        valid = jnp.repeat(valid, n_heads, axis=0)
+    agg = neighbor_attn_ref(q, k, v, valid)
+    if n_heads > 1:
+        agg = agg.reshape(r, e)
+    return agg
+
+
 def ssd_chunk_ref(q, k, v, lcum, h0):
     """One SSD / mLSTM chunk (fp32).
     q,k: (L,N), v: (L,P), lcum: (L,) inclusive cumulative log-decay,

@@ -50,6 +50,11 @@ def main(argv=None):
     ap.add_argument("--n-heads", type=int, default=2,
                     help="attention heads in the embedding stack")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-dedup-embed", action="store_true",
+                    help="disable unique-frontier compaction in the "
+                         "embedding stack and run the seed L-hop expansion "
+                         "(M*K^d rows per hop) instead of the deduplicated "
+                         "unique tables (docs/DESIGN.md §Embedding stack)")
     ap.add_argument("--use-kernels", action="store_true",
                     help="route the full memory-maintenance step (fused GRU"
                          " + PRES filter kernel under --pres, gru_cell "
@@ -113,6 +118,7 @@ def main(argv=None):
         use_pres=args.pres, beta=args.beta, delta_mode=args.delta_mode,
         pres_scale=args.pres_scale, use_kernels=args.use_kernels,
         kernels_mode=args.kernels_mode,
+        dedup_embed=not args.no_dedup_embed,
         pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk,
         event_store=args.event_store, n_shards=args.n_shards,
         shard_budget=args.shard_budget)

@@ -90,14 +90,15 @@ def _check_heads(cfg):
 
 
 def _sdpa_single_head(q, k, v, valid):
-    """Single-head masked attention — the historical embed_nodes inner loop,
-    kept verbatim so n_layers=1 / n_heads=1 stays bit-exact with the
-    pre-registry path. q: (M, E); k, v: (M, K, E); valid: (M, K) bool."""
-    scores = jnp.einsum("me,mke->mk", q, k) / jnp.sqrt(q.shape[-1])
-    scores = jnp.where(valid, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    probs = jnp.where(jnp.any(valid, -1, keepdims=True), probs, 0.0)
-    return jnp.einsum("mk,mke->me", probs, v)
+    """Single-head masked attention — THE kernel-parity oracle
+    (`kernels/ref.py::neighbor_attn_ref`), shared instead of duplicated so
+    the reference path and the Pallas validation target cannot drift. At
+    fp32 the oracle is bit-identical to the historical embed_nodes inner
+    loop (its extra casts are identities), so n_layers=1 / n_heads=1 stays
+    bit-exact with the pre-registry path.
+    q: (M, E); k, v: (M, K, E); valid: (M, K) bool."""
+    from repro.kernels import ref as kref
+    return kref.neighbor_attn_ref(q, k, v, valid)
 
 
 def neighbor_attention(q, k, v, valid, cfg):
@@ -165,8 +166,76 @@ def _tgn_layer(params, layer_params, h_self, h_nbr, t_self, t_nbr, valid, cfg):
         jnp.concatenate([agg, h_self], axis=-1) @ layer_params["wo"])
 
 
+def _tgn_layer_compact(params, layer_params, h_self, h_child, t_self,
+                       child, cfg):
+    """One temporal-attention layer on the DEDUPLICATED frontier: rows of
+    h_self gather their K neighbours' layer l-1 rows from the child hop's
+    unique table (`h_child`) through the compaction inverse indices. With
+    cfg.use_kernels the whole chain — gather, time-encode, Q/K/V, masked
+    softmax, weighted sum — runs as the fused `embed_attn` kernel."""
+    rows = h_self.shape[0]
+    kk = child["valid"].shape[1]
+    dt = t_self[:, None] - child["t_edge"]
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        agg = kops.embed_attn(
+            h_self, h_child, child["inverse"].reshape(rows, kk), dt,
+            child["valid"], params["time"]["w"], params["time"]["b"],
+            layer_params["wq"], layer_params["wk"], layer_params["wv"],
+            n_heads=cfg.n_heads, mode=cfg.kernels_mode)
+    else:
+        h_nbr = annotate.events(
+            h_child[child["inverse"]]).reshape(rows, kk, -1)
+        t_enc = modules.time_encode(params["time"], dt)
+        kv_in = jnp.concatenate([h_nbr, t_enc], axis=-1)
+        q = h_self @ layer_params["wq"]
+        k = kv_in @ layer_params["wk"]
+        v = kv_in @ layer_params["wv"]
+        agg = neighbor_attention(q, k, v, child["valid"], cfg)
+    return jax.nn.relu(
+        jnp.concatenate([agg, h_self], axis=-1) @ layer_params["wo"])
+
+
+def _tgn_apply_dedup(params, cfg, state, nodes, t_query):
+    """The unique-frontier path: hop d >= 1 holds one row per distinct
+    (node, time) key (core/batching.py::expand_frontiers_unique), so every
+    per-layer hidden state is computed once per unique entry and scattered
+    back through the inverse indices. Hop 0 (the seeds) stays uncompacted
+    — its rows ARE the outputs, and level-0 inputs are pure memory-row
+    gathers, which keeps depth 1 bit-exact with the dense expansion."""
+    mem = state["memory"]
+    n_layers = cfg.n_layers
+    hops = batching.expand_frontiers_unique(state["neighbors"], nodes,
+                                            t_query, n_layers, cfg.n_nodes)
+    h = [annotate.events(mem.mem[hop["nodes"]]).astype(jnp.float32)
+         for hop in hops]
+    for l in range(1, n_layers + 1):
+        lp = params["emb"][_layer_name(l - 1)]
+        h = [
+            _tgn_layer_compact(params, lp, h[d], h[d + 1], hops[d]["t"],
+                               hops[d + 1], cfg)
+            for d in range(n_layers - l + 1)
+        ]
+    return h[0]
+
+
 def tgn_apply(params, cfg, state, nodes, t_query):
     """L-hop temporal graph attention (TGN, Eq. 1's EMB).
+
+    With cfg.dedup_embed (the default) each hop is compacted to its
+    distinct (node, time) keys before any compute — per-layer work drops
+    from sum_d M*K**d to sum_d min(rows_{d-1}, n_nodes)*K attention rows
+    (docs/DESIGN.md §Embedding stack) — and cfg.use_kernels routes each
+    layer through the gather-fused `embed_attn` Pallas kernel. The dense
+    seed expansion below remains as the parity/bench baseline.
+    """
+    if cfg.dedup_embed:
+        return _tgn_apply_dedup(params, cfg, state, nodes, t_query)
+    return _tgn_apply_dense(params, cfg, state, nodes, t_query)
+
+
+def _tgn_apply_dense(params, cfg, state, nodes, t_query):
+    """The seed expansion (cfg.dedup_embed=False).
 
     Bottom-up over static frontiers: hop d holds (M*K**d,) node ids; layer l
     computes h^(l) for every frontier level still needed (0..L-l), attending

@@ -68,6 +68,15 @@ class MDGNNConfig:
     # bf16 memory table halves HBM + collective bytes for the table at
     # production scale; compute stays fp32 (docs/EXPERIMENTS.md §Perf iter. 6)
     mem_dtype: str = "float32"
+    # Unique-frontier compaction for the tgn_attn embedding stack
+    # (docs/DESIGN.md §Embedding stack): dedupe each hop's (M*K**d,)
+    # frontier to one row per distinct (node, time) key before the
+    # per-layer attention, under the static budget
+    # min(rows_{d-1}, n_nodes)*K. A pure indirection change — bit-exact
+    # with the dense expansion at depth 1, <= 1e-5 deeper (different
+    # matmul batching) — that shrinks depth-2+ frontiers multiplicatively
+    # whenever the node-id space is smaller than the seed set.
+    dedup_embed: bool = True
     use_kernels: bool = False    # route GRU/filter through Pallas kernels
     # Kernel execution mode forwarded to kernels/ops.py dispatch:
     # "auto" resolves per backend/autotune-cache (tpu -> compiled Pallas,

@@ -199,6 +199,22 @@ def test_shape_sig_distinguishes_shape_and_dtype():
     assert c == "int32[4];int"
 
 
+def test_embedding_kernels_expose_swept_blocks(tmp_cache):
+    """The embedding-path kernels must participate in the block sweep:
+    neighbor_attn's block_m is a registry default (not impl_only) and
+    embed_attn sweeps block_k, so the autotune cache can pick tiles."""
+    from repro.kernels import ops
+    for name, key in (("neighbor_attn", "block_m"), ("embed_attn",
+                                                     "block_k")):
+        assert key in ops.get_kernel(name).blocks
+        cands = autotune.candidates(name, backend="cpu")
+        swept = {c["blocks"].get(key) for c in cands
+                 if c["mode"] != "oracle"}
+        expected = set(autotune.BLOCK_CANDIDATES[key]) | {
+            ops.get_kernel(name).blocks[key]}
+        assert swept == expected
+
+
 def test_tune_raises_when_every_candidate_fails(tmp_cache):
     def failing_timer(fn, args, cand, repeats=3):
         raise RuntimeError("boom")

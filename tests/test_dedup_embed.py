@@ -1,0 +1,338 @@
+"""Unique-frontier compaction + the deduplicated embedding path
+(docs/DESIGN.md §Embedding stack, core/batching.py, kernels/embed_attn.py).
+
+Contracts:
+* `compact_unique` inverse indices reconstruct the original (node, time)
+  sequence exactly — deterministic cases plus a hypothesis property when
+  the container has hypothesis installed;
+* `expand_frontiers_unique` matches the seed `expand_frontiers` hop-for-hop
+  after inverse-index expansion, including the clamped node-0 slots the
+  `valid` mask hides;
+* `embed_nodes` with `dedup_embed=True` is bit-exact with the seed
+  expansion at depth 1 (pure gather composition) and allclose at depth
+  >= 2, across the jnp and kernel routings;
+* training parity of the dedup path across all three engines (sequential,
+  pipelined, scan-compiled) and serve `query`/`recommend_topk` parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batching
+from repro.graph import datasets
+from repro.graph.events import EventBatch
+from repro.graph.negatives import sample_negatives
+from repro.models import mdgnn
+from repro.models.mdgnn import MDGNNConfig
+from repro.optim import optimizers
+from repro.train import loop, pipeline, scan
+
+from tests.test_embeddings import (BATCHES, QUERY_NODES, QUERY_T, _batch,
+                                   _cfg, _warm_state)
+
+
+# ---------------------------------------------------------------------------
+# compact_unique
+# ---------------------------------------------------------------------------
+
+
+def _check_compaction(nodes, t, budget):
+    nodes = jnp.asarray(nodes, jnp.int32)
+    t = jnp.asarray(t, jnp.float32)
+    out = batching.compact_unique(nodes, t, budget)
+    n_unique = int(out["n_unique"])
+    pairs = {(int(a), float(b)) for a, b in zip(nodes, t)}
+    assert n_unique == len(pairs)
+    assert n_unique <= out["nodes"].shape[0] <= max(budget, 1)
+    # the inverse gather reconstructs the original sequence exactly
+    np.testing.assert_array_equal(
+        np.asarray(out["nodes"][out["inverse"]]), np.asarray(nodes))
+    np.testing.assert_array_equal(
+        np.asarray(out["t"][out["inverse"]]), np.asarray(t))
+    # the live unique slots hold each distinct pair exactly once
+    got = {(int(a), float(b))
+           for a, b in zip(out["nodes"][:n_unique], out["t"][:n_unique])}
+    assert got == pairs
+    return out
+
+
+def test_compact_unique_basic():
+    out = _check_compaction([3, 1, 3, 1, 0], [1.0, 2.0, 1.0, 2.0, 0.5], 5)
+    assert int(out["n_unique"]) == 3
+
+
+def test_compact_unique_same_node_distinct_times():
+    # (node, time) is the dedup key — one node at two times stays two rows
+    out = _check_compaction([4, 4, 4], [1.0, 2.0, 1.0], 3)
+    assert int(out["n_unique"]) == 2
+
+
+def test_compact_unique_all_duplicates_and_clamped_zeros():
+    # clamped empty neighbour slots arrive as node 0 (expand clamps -1 to
+    # 0; valid masks them downstream) and must compact like any other id
+    out = _check_compaction([0, 0, 0, 0], [0.0, 0.0, 0.0, 0.0], 4)
+    assert int(out["n_unique"]) == 1
+
+
+def test_compact_unique_budget_is_static_shape():
+    nodes = jnp.arange(6, dtype=jnp.int32)
+    out = batching.compact_unique(nodes, jnp.zeros(6), 17)
+    # budget is clamped to n: never allocate more rows than the input has
+    assert out["nodes"].shape == (6,)
+    out = batching.compact_unique(nodes, jnp.zeros(6), 4)
+    assert out["nodes"].shape == (4,)   # static even when too small ...
+    # ... and overflow drops writes rather than erroring (mode="drop")
+    assert int(out["n_unique"]) == 6    # count still reports the true total
+
+
+def test_compact_unique_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 3)),
+                        min_size=1, max_size=64))
+    @hyp.settings(deadline=None, max_examples=50)
+    def prop(pairs):
+        nodes = [p[0] for p in pairs]
+        t = [float(p[1]) for p in pairs]
+        _check_compaction(nodes, t, len(pairs))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# expand_frontiers_unique vs the seed expansion
+# ---------------------------------------------------------------------------
+
+
+def _warm_neighbors(cfg):
+    state = batching.init_neighbors(cfg.n_nodes, cfg.n_neighbors)
+    for b in BATCHES:
+        state = batching.update_neighbors(state, _batch(*b))
+    return state
+
+
+@pytest.mark.parametrize("n_hops", [1, 2, 3])
+def test_expand_frontiers_unique_matches_dense(n_hops):
+    cfg = _cfg("tgn")
+    nbrs = _warm_neighbors(cfg)
+    nodes = jnp.asarray(QUERY_NODES, jnp.int32)
+    t = jnp.asarray(QUERY_T, jnp.float32)
+    dense = batching.expand_frontiers(nbrs, nodes, t, n_hops)
+    uniq = batching.expand_frontiers_unique(nbrs, nodes, t, n_hops,
+                                            cfg.n_nodes)
+    np.testing.assert_array_equal(np.asarray(uniq[0]["nodes"]),
+                                  np.asarray(dense[0]["nodes"]))
+    # pidx maps each DENSE hop-(d-1) row to its row in the unique hop-(d-1)
+    # table; hop d's inverse indexes children of the UNIQUE parents, so the
+    # dense reconstruction composes the inverse maps down the chain
+    pidx = np.arange(len(QUERY_NODES))
+    for d in range(1, n_hops + 1):
+        hu, hd = uniq[d], dense[d]
+        dense_prev, kk = hd["valid"].shape
+        # valid / raw edge times of the unique parents' children match the
+        # dense hop rows after the parent re-index
+        np.testing.assert_array_equal(np.asarray(hu["valid"])[pidx],
+                                      np.asarray(hd["valid"]))
+        np.testing.assert_array_equal(
+            np.asarray(hu["t_edge"])[pidx].reshape(-1), np.asarray(hd["t"]))
+        prev_budget = hu["valid"].shape[0]
+        didx = (np.asarray(hu["inverse"]).reshape(prev_budget, kk)[pidx]
+                .reshape(-1))
+        np.testing.assert_array_equal(np.asarray(hu["nodes"])[didx],
+                                      np.asarray(hd["nodes"]))
+        np.testing.assert_array_equal(np.asarray(hu["t"])[didx],
+                                      np.asarray(hd["t"]))
+        # the sound static budget: unique parent NODES x K
+        assert hu["nodes"].shape[0] <= min(prev_budget, cfg.n_nodes) * kk
+        assert int(hu["n_unique"]) <= hu["nodes"].shape[0]
+        pidx = didx
+
+
+def test_frontier_dedup_stats_fields():
+    cfg = _cfg("tgn")
+    nbrs = _warm_neighbors(cfg)
+    stats = batching.frontier_dedup_stats(
+        nbrs, jnp.asarray(QUERY_NODES, jnp.int32),
+        jnp.asarray(QUERY_T, jnp.float32), 2, cfg.n_nodes)
+    assert len(stats["raw_rows"]) == 2
+    assert stats["raw_rows"][0] == len(QUERY_NODES) * cfg.n_neighbors
+    assert 0 < stats["measured_ratio"] <= stats["budget_ratio"] or \
+        stats["budget_ratio"] >= 1.0
+    assert all(u <= b for u, b in
+               zip(stats["unique_rows"], stats["budget_rows"]))
+
+
+# ---------------------------------------------------------------------------
+# embed_nodes parity: dedup vs seed expansion
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, seed=0):
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(seed), cfg)
+    state = _warm_state(cfg, params, [_batch(*b) for b in BATCHES])
+    h = mdgnn.embed_nodes(params, cfg, state,
+                          jnp.asarray(QUERY_NODES, jnp.int32),
+                          jnp.asarray(QUERY_T, jnp.float32))
+    return np.asarray(h)
+
+
+def test_depth1_dedup_is_bit_exact():
+    """Depth 1 never recomputes hidden rows — the child rows are pure
+    gathers (mem[uniq][inverse] == mem[raw] elementwise), so the dedup
+    path must be bitwise identical to the seed expansion."""
+    cfg = _cfg("tgn", n_layers=1)
+    np.testing.assert_array_equal(
+        _embed(cfg),
+        _embed(dataclasses.replace(cfg, dedup_embed=False)))
+
+
+@pytest.mark.parametrize("n_layers", [2, 3])
+@pytest.mark.parametrize("n_heads", [1, 2])
+def test_deep_dedup_matches_dense(n_layers, n_heads):
+    cfg = _cfg("tgn", n_layers=n_layers, n_heads=n_heads)
+    np.testing.assert_allclose(
+        _embed(cfg),
+        _embed(dataclasses.replace(cfg, dedup_embed=False)),
+        atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_layers", [1, 2])
+def test_kernel_routing_matches_jnp_on_dedup_path(n_layers):
+    cfg = _cfg("tgn", n_layers=n_layers, n_heads=2)
+    np.testing.assert_allclose(
+        _embed(cfg),
+        _embed(dataclasses.replace(cfg, use_kernels=True)),
+        atol=1e-5, rtol=1e-5)
+
+
+def test_embed_attn_kernel_used_by_dedup_layer(monkeypatch):
+    """cfg.use_kernels on the dedup path must route through the embed_attn
+    registry entry (not the unfused neighbor_attn chain)."""
+    from repro.kernels import ops
+    calls = []
+    orig = ops.dispatch
+
+    def spy(name, *a, **kw):
+        calls.append(name)
+        return orig(name, *a, **kw)
+
+    monkeypatch.setattr(ops, "dispatch", spy)
+    _embed(_cfg("tgn", n_layers=2, n_heads=2, use_kernels=True))
+    assert "embed_attn" in calls
+
+
+# ---------------------------------------------------------------------------
+# engine + serve parity
+# ---------------------------------------------------------------------------
+
+
+def _stream():
+    return datasets.generate(datasets.SyntheticSpec("tiny", 50, 30, 600, 8),
+                             seed=0)
+
+
+def _train_cfg(stream, **kw):
+    return MDGNNConfig(variant="tgn", n_nodes=stream.num_nodes,
+                       d_edge=stream.feat_dim, d_mem=8, d_msg=8, d_time=4,
+                       d_embed=8, n_neighbors=4, use_pres=True, **kw)
+
+
+def _run_sequential(cfg, stream, batches, dst):
+    params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = optimizers.adamw(1e-3)
+    step = loop.make_train_step(cfg, opt)
+    p, _, s, res = loop.run_epoch(params, opt.init(params),
+                                  mdgnn.init_state(cfg), batches, cfg, step,
+                                  jax.random.PRNGKey(1), dst)
+    return p, s, res
+
+
+@pytest.mark.parametrize("n_layers", [1, 2])
+def test_sequential_engine_dedup_parity(n_layers):
+    """Dedup on/off trains to matching loss/AP through the sequential
+    engine. The forward pass is (near-)identical; the backward pass
+    accumulates table cotangents in a different order, so depth-2 parity
+    is numeric, not bitwise."""
+    stream = _stream()
+    batches = stream.temporal_batches(100)
+    dst = (50, 80)
+    res = {}
+    for dedup in (False, True):
+        cfg = _train_cfg(stream, n_layers=n_layers, dedup_embed=dedup)
+        _, _, res[dedup] = _run_sequential(cfg, stream, batches, dst)
+    np.testing.assert_allclose(res[True].loss, res[False].loss,
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(res[True].ap, res[False].ap,
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_pipelined_engine_dedup_parity():
+    stream = _stream()
+    batches = stream.temporal_batches(100)
+    dst = (50, 80)
+    losses = {}
+    for dedup in (False, True):
+        cfg = _train_cfg(stream, n_layers=2, pipeline_depth=1,
+                         dedup_embed=dedup)
+        params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+        opt = optimizers.adamw(1e-3)
+        step = pipeline.make_train_step(cfg, opt)
+        p, _, s, res = pipeline.run_epoch(params, opt.init(params),
+                                          mdgnn.init_state(cfg), batches,
+                                          cfg, step, jax.random.PRNGKey(1),
+                                          dst)
+        losses[dedup] = res.loss
+    np.testing.assert_allclose(losses[True], losses[False],
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_scan_engine_dedup_parity():
+    stream = _stream()
+    batches = stream.temporal_batches(100)
+    dst = (50, 80)
+    losses = {}
+    for dedup in (False, True):
+        cfg = _train_cfg(stream, n_layers=2, scan_chunk=2,
+                         dedup_embed=dedup)
+        params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+        opt = optimizers.adamw(1e-3)
+        engine = scan.ScanEngine(cfg, opt)
+        p, _, s, res = engine.run_epoch(params, opt.init(params),
+                                        mdgnn.init_state(cfg), batches,
+                                        jax.random.PRNGKey(1), dst)
+        losses[dedup] = res.loss
+    np.testing.assert_allclose(losses[True], losses[False],
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_serve_query_and_topk_dedup_parity():
+    from repro.serve import MicroBatcher, ServeEngine
+    stream = _stream()
+    dst = (50, 80)
+    outs = {}
+    for dedup in (False, True):
+        cfg = _train_cfg(stream, n_layers=2, n_heads=2, dedup_embed=dedup)
+        params, _ = mdgnn.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, mdgnn.init_state(cfg),
+                          item_range=dst,
+                          batcher=MicroBatcher(buckets=(16, 64),
+                                               d_edge=stream.feat_dim))
+        eng.ingest(stream.src[:200], stream.dst[:200], stream.t[:200],
+                   stream.feat[:200])
+        scores = eng.query(stream.src[200:216], stream.dst[200:216],
+                           stream.t[200:216])
+        vals, ids = eng.recommend_topk(stream.src[200:204],
+                                       stream.t[200:204], 5)
+        outs[dedup] = (np.asarray(scores), np.asarray(vals), np.asarray(ids))
+    np.testing.assert_allclose(outs[True][0], outs[False][0],
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(outs[True][1], outs[False][1],
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(outs[True][2], outs[False][2])

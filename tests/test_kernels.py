@@ -334,7 +334,7 @@ def test_registry_entries_complete():
     a one-line doc; dispatch resolves by name."""
     expected = {"gru_cell", "pres_filter", "pres_predict", "memory_update",
                 "memory_update_table", "link_score", "neighbor_attn",
-                "ssd_chunk", "flash_attn"}
+                "embed_attn", "ssd_chunk", "flash_attn"}
     assert expected == set(ops.REGISTRY)
     for name, spec in ops.REGISTRY.items():
         assert spec.name == name
@@ -441,6 +441,70 @@ def test_neighbor_attn_all_invalid_rows():
     want = ref.neighbor_attn_ref(q, kk, v, valid)
     assert bool(jnp.all(jnp.isfinite(got)))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# embed_attn
+# ---------------------------------------------------------------------------
+
+
+def _embed_attn_args(r, k, u, seed=0, d_self=8, d_tab=8, d_time=4, e=8):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(r, d_self)), jnp.float32),
+            jnp.asarray(rng.normal(size=(u, d_tab)), jnp.float32),
+            jnp.asarray(rng.integers(0, u, size=(r, k)), jnp.int32),
+            jnp.asarray(rng.normal(size=(r, k)), jnp.float32),
+            jnp.asarray(rng.random((r, k)) > 0.3),
+            jnp.asarray(rng.normal(size=(d_time,)), jnp.float32),
+            jnp.asarray(rng.normal(size=(d_time,)), jnp.float32),
+            jnp.asarray(rng.normal(size=(d_self, e)), jnp.float32),
+            jnp.asarray(rng.normal(size=(d_tab + d_time, e)), jnp.float32),
+            jnp.asarray(rng.normal(size=(d_tab + d_time, e)), jnp.float32))
+
+
+@pytest.mark.parametrize("r,k,h,bk", [(4, 4, 1, 1), (4, 4, 2, 2),
+                                      (3, 5, 2, 2),   # K % block_k != 0
+                                      (2, 3, 1, 4)])  # block_k > K
+def test_embed_attn_matches_ref(r, k, h, bk):
+    """Interpret-mode Pallas (scalar-prefetch gather + online softmax)
+    against the pure-jnp oracle, including padded neighbour blocks."""
+    args = _embed_attn_args(r, k, u=r + 3, seed=r * k + h)
+    got = ops.embed_attn(*args, n_heads=h, block_k=bk, interpret=True)
+    want = ref.embed_attn_ref(*args, n_heads=h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_embed_attn_all_invalid_rows():
+    """A parent with zero valid neighbours must produce zeros, not NaNs
+    (the online-softmax accumulator never sees a live slot)."""
+    args = list(_embed_attn_args(5, 4, u=6, seed=3))
+    args[4] = jnp.zeros((5, 4), bool)
+    got = ops.embed_attn(*args, n_heads=2, block_k=2, interpret=True)
+    want = ref.embed_attn_ref(*args, n_heads=2)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_embed_attn_grads_match_oracle():
+    """The custom VJP (Pallas forward, oracle backward) must agree with
+    grad-of-oracle on every differentiable input — notably the table,
+    whose cotangent flows through the gather transpose (a scatter-add)."""
+    args = _embed_attn_args(4, 4, u=7, seed=9)
+    argnums = (0, 1, 7, 8, 9)   # h_self, tab, wq, wk, wv
+
+    def loss(fn, extra):
+        return lambda *diff: jnp.sum(
+            fn(*(list(diff[:2]) + list(args[2:7]) + list(diff[2:])),
+               **extra) ** 2)
+
+    diff_args = tuple(args[i] for i in argnums)
+    gk = jax.grad(loss(ops.embed_attn,
+                       dict(n_heads=2, block_k=2, interpret=True)),
+                  argnums=tuple(range(5)))(*diff_args)
+    gr = jax.grad(loss(ref.embed_attn_ref, dict(n_heads=2)),
+                  argnums=tuple(range(5)))(*diff_args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
