@@ -65,7 +65,7 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
               d_mem=32, n_layers=1, n_heads=2,
               use_kernels=False, dedup_embed=True, pipeline_depth=0,
               host_prefetch=False, scan_chunk=1,
-              dst_range=None) -> RunResult:
+              dst_range=None, obs_metrics=False) -> RunResult:
     cfg = MDGNNConfig(
         variant=variant, n_nodes=stream.num_nodes, d_edge=stream.feat_dim,
         d_mem=d_mem, d_msg=d_mem, d_time=16, d_embed=d_mem, n_neighbors=8,
@@ -73,7 +73,8 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
         dedup_embed=dedup_embed,
         use_pres=use_pres, use_smoothing=use_smoothing, beta=beta,
         pres_scale=pres_scale, delta_mode=delta_mode,
-        pipeline_depth=pipeline_depth, scan_chunk=scan_chunk)
+        pipeline_depth=pipeline_depth, scan_chunk=scan_chunk,
+        obs_metrics=obs_metrics)
     key = jax.random.PRNGKey(seed)
     params, _ = mdgnn.init_params(key, cfg)
     state = mdgnn.init_state(cfg)
@@ -144,32 +145,22 @@ def train_run(stream: EventStream, spec, *, variant="tgn", use_pres=False,
                      dispatches_per_epoch=dispatches)
 
 
-def run_metadata() -> dict:
-    """Provenance stamped into every results JSON: without the jax version,
-    backend and kernel execution mode a committed throughput number cannot
-    be compared against a re-run (the CPU-vs-TPU and interpret-vs-oracle
-    deltas are orders of magnitude — docs/KERNELS.md §Execution policy)."""
-    import jaxlib
-    from repro.kernels import ops as kops
-    pol = kops.execution_policy()
-    return {
-        "jax": jax.__version__,
-        "jaxlib": jaxlib.__version__,
-        "backend": pol["backend"],
-        "kernels_default_mode": pol["default_mode"],
-        "kernels_env_mode": pol["env_mode"],
-        "autotune_entries": pol["autotune_entries"],
-        "device_count": jax.device_count(),
-        "cpu_count": __import__("os").cpu_count(),
-    }
+def run_metadata(cfg=None) -> dict:
+    """Provenance stamped into every results JSON — delegates to
+    obs.sink.run_metadata (one schema with the run-logs), which adds the
+    git commit hash and, given a cfg, its sha256 digest: a committed
+    results/bench/*.json row is thereby traceable to the exact revision
+    AND model configuration that produced it."""
+    from repro.obs import sink
+    return sink.run_metadata(cfg)
 
 
-def emit(name: str, rows: Sequence[dict]):
+def emit(name: str, rows: Sequence[dict], cfg=None):
     """Print CSV to stdout and persist JSON to results/bench/<name>.json
-    as {"meta": run_metadata(), "rows": [...]}."""
+    as {"meta": run_metadata(cfg), "rows": [...]}."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     (RESULTS_DIR / f"{name}.json").write_text(
-        json.dumps({"meta": run_metadata(), "rows": list(rows)}, indent=2))
+        json.dumps({"meta": run_metadata(cfg), "rows": list(rows)}, indent=2))
     if not rows:
         return
     cols = list(rows[0].keys())

@@ -37,6 +37,14 @@ CHUNKS = (1, 4, 16, 64)
 # chunk (the regression this gate exists to catch).
 PERF_GATE_TOL = 0.75
 
+# --obs-gate: telemetry-on events/sec must stay >= this fraction of
+# telemetry-off. The obs layer's contract is zero per-step host syncs
+# (docs/OBSERVABILITY.md §Zero-sync contract) — the step only packs a
+# small device vector, so the true ratio is ~1.0; anyone adding a
+# per-step float()/device_get to the instrumented step bodies blows
+# through this at the dispatch-bound batch size below.
+OBS_GATE_TOL = 0.9
+
 
 def run(fast: bool = False, seeds: int | None = None, tiny: bool = False):
     n_events = 1200 if tiny else (3000 if fast else 6000)
@@ -115,6 +123,53 @@ def run(fast: bool = False, seeds: int | None = None, tiny: bool = False):
     return rows
 
 
+def run_obs_gate():
+    """CI telemetry-overhead gate (docs/OBSERVABILITY.md §Overhead).
+
+    Runs the tiny dispatch-bound benchmark with obs_metrics off and on,
+    interleaved epoch-for-epoch via back-to-back runs, and asserts the
+    metrics-on throughput stays within OBS_GATE_TOL of metrics-off. The
+    small temporal batch makes any per-step host sync the instrumentation
+    might introduce dominate the epoch time — exactly the regression the
+    zero-sync contract forbids."""
+    stream, spec = common.bench_stream(n_events=1200)
+    # alternate the arms across repetitions and pool their steady epochs:
+    # scheduler spikes are one-sided (positive), so min over the pool
+    # converges to each arm's uncontended time — a single steady epoch
+    # per arm swings +-20% on a shared CI box, far above the effect the
+    # gate is after
+    secs = {False: [], True: []}
+    losses = {}
+    for _ in range(3):
+        for obs in (False, True):
+            res = common.train_run(
+                stream, spec, variant="tgn", use_pres=True, batch_size=50,
+                epochs=2, d_mem=32, scan_chunk=1, obs_metrics=obs)
+            secs[obs].extend(res.epoch_seconds[1:] or res.epoch_seconds)
+            losses[obs] = res.losses[-1]
+    rows = [{"obs_metrics": int(obs),
+             "events_per_sec": 1200 / min(secs[obs]),
+             "epoch_seconds": min(secs[obs]),
+             "loss_final": losses[obs]} for obs in (False, True)]
+    off, on = rows
+    # telemetry must not change the optimization itself, only observe it
+    assert abs(off["loss_final"] - on["loss_final"]) < 1e-5, (
+        f"obs_metrics changed the training trajectory: "
+        f"loss {off['loss_final']} vs {on['loss_final']}")
+    ratio = on["events_per_sec"] / off["events_per_sec"]
+    print(f"[fig_scan --obs-gate] metrics on/off = "
+          f"{on['events_per_sec']:.0f}/{off['events_per_sec']:.0f} ev/s "
+          f"(ratio {ratio:.2f})")
+    assert ratio >= OBS_GATE_TOL, (
+        f"telemetry overhead gate failed: metrics-on at "
+        f"{on['events_per_sec']:.0f} vs {off['events_per_sec']:.0f} ev/s "
+        f"(ratio {ratio:.2f} < {OBS_GATE_TOL}) — the obs layer must not "
+        f"add per-step host syncs (docs/OBSERVABILITY.md §Zero-sync "
+        f"contract)")
+    print("[fig_scan --obs-gate] telemetry overhead gate OK")
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -122,5 +177,11 @@ if __name__ == "__main__":
     ap.add_argument("--tiny", action="store_true",
                     help="CI bench-smoke: seconds-scale run that asserts "
                          "scan/kernel parity instead of measuring throughput")
+    ap.add_argument("--obs-gate", action="store_true",
+                    help="CI telemetry-overhead gate: assert metrics-on "
+                         "throughput >= 0.9x metrics-off on the tiny bench")
     args = ap.parse_args()
-    run(fast=args.fast, tiny=args.tiny)
+    if args.obs_gate:
+        run_obs_gate()
+    else:
+        run(fast=args.fast, tiny=args.tiny)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
@@ -21,17 +23,19 @@ def _flatten(tree):
 
 
 def save_checkpoint(path: str, tree) -> None:
-    path = pathlib.Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    leaves, treedef = _flatten(tree)
-    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    buf = io.BytesIO()
-    np.savez(buf, **arrays)
-    manifest = msgpack.packb({"treedef": str(treedef), "n_leaves": len(leaves)})
-    with open(path, "wb") as f:
-        f.write(len(manifest).to_bytes(8, "little"))
-        f.write(manifest)
-        f.write(buf.getvalue())
+    with obs_trace.span("checkpoint_save"):
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        leaves, treedef = _flatten(tree)
+        arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        manifest = msgpack.packb({"treedef": str(treedef),
+                                  "n_leaves": len(leaves)})
+        with open(path, "wb") as f:
+            f.write(len(manifest).to_bytes(8, "little"))
+            f.write(manifest)
+            f.write(buf.getvalue())
 
 
 def load_checkpoint(path: str, like_tree, shardings=None):
@@ -45,11 +49,11 @@ def load_checkpoint(path: str, like_tree, shardings=None):
     optional tree matching `like_tree`; leaves with a sharding are placed
     with `jax.device_put(x, sharding)` (restore onto a different mesh),
     the rest land on the default device."""
-    with open(path, "rb") as f:
+    with obs_trace.span("checkpoint_load"), open(path, "rb") as f:
         mlen = int.from_bytes(f.read(8), "little")
         manifest = msgpack.unpackb(f.read(mlen))
         payload = io.BytesIO(f.read())
-    data = np.load(payload)
+        data = np.load(payload)
     leaves, treedef = jax.tree.flatten(like_tree)
     if manifest["n_leaves"] != len(leaves):
         raise ValueError(

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -192,7 +194,10 @@ class PrefetchIterator:
     def __next__(self):
         if self._stop.is_set():
             raise StopIteration
-        item = self._queue.get()
+        # span = time the consumer BLOCKED on batch prep: nonzero totals in
+        # the run-log mean the producer thread is the bottleneck
+        with obs_trace.span("prefetch_wait"):
+            item = self._queue.get()
         if item is self._DONE:
             self._stop.set()
             raise StopIteration

@@ -36,6 +36,7 @@ import pathlib
 import numpy as np
 
 from repro.graph.events import EventStream
+from repro.obs import trace as obs_trace
 
 MAGIC = "repro-evstore"
 VERSION = 1
@@ -201,11 +202,12 @@ class EventStore:
     def window(self, lo: int, hi: int | None = None) -> EventStream:
         """Zero-copy in-RAM-contract view of [lo, hi): an `EventStream`
         whose columns are fresh contiguous memmaps."""
-        return EventStream(self.map_column("src", lo, hi),
-                           self.map_column("dst", lo, hi),
-                           self.map_column("t", lo, hi),
-                           self.map_column("feat", lo, hi),
-                           self.num_nodes)
+        with obs_trace.span("store_window"):
+            return EventStream(self.map_column("src", lo, hi),
+                               self.map_column("dst", lo, hi),
+                               self.map_column("t", lo, hi),
+                               self.map_column("feat", lo, hi),
+                               self.num_nodes)
 
     def stream(self, window_events: int = DEFAULT_WINDOW) -> "StoreStream":
         """The full stream behind the `EventStream` contract, iterated

@@ -28,6 +28,7 @@ exposes the resolved policy for logs and bench metadata.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import os
@@ -192,6 +193,27 @@ def _oracle_fn(name: str, kw_items: tuple) -> Callable:
     return jax.jit(functools.partial(fn, **dict(kw_items)))
 
 
+# Kernel-dispatch log (docs/OBSERVABILITY.md §Kernel-dispatch table):
+# (kernel, resolved mode) -> dispatch-call count. dispatch() runs at TRACE
+# time — once per jit compilation, not per executed step — so the log is a
+# per-process record of which execution-policy branch each kernel actually
+# took, at zero steady-state cost. The obs sink stamps it into every
+# run-log epilogue.
+DISPATCH_LOG: collections.Counter = collections.Counter()
+
+
+def dispatch_log() -> dict:
+    """{kernel: {mode: dispatch_count}} since process start / last reset."""
+    out: dict = {}
+    for (name, mode), cnt in sorted(DISPATCH_LOG.items()):
+        out.setdefault(name, {})[mode] = cnt
+    return out
+
+
+def reset_dispatch_log() -> None:
+    DISPATCH_LOG.clear()
+
+
 def dispatch(name: str, *args, mode: str | None = None, **kw):
     """Single dispatch point: resolve the execution mode (per-call >
     env > autotune cache > backend default), merge block sizes (per-call >
@@ -218,6 +240,7 @@ def dispatch(name: str, *args, mode: str | None = None, **kw):
         mode = _backend_default()
     for k, v in {**dict(spec.blocks), **dict(sel_blocks)}.items():
         kw.setdefault(k, v)
+    DISPATCH_LOG[(name, mode)] += 1
     if mode == "oracle":
         strip = set(spec.blocks) | set(spec.impl_only) | {"interpret"}
         okw = tuple(sorted((k, v) for k, v in kw.items() if k not in strip))

@@ -58,12 +58,47 @@ def serve_mdgnn(args):
         engine = ServeEngine(cfg, params, init_state(cfg), batcher=batcher,
                              item_range=dst_range)
         origin = "untrained params (pass --checkpoint for a trained model)"
+    # telemetry (docs/OBSERVABILITY.md): same sink schema as train —
+    # manifest first, one "serve" record with counters + full latency
+    # histograms, then the span/kernel-dispatch epilogue
+    runlog = None
+    if args.metrics_out:
+        from repro.obs import sink, trace as obs_trace
+        obs_trace.enable()
+        runlog = sink.RunLog(args.metrics_out, role="serve", cfg=cfg)
+    tracer = None
+    if args.trace_dir:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.StepTraceCapture(args.trace_dir,
+                                            n_steps=args.trace_steps)
+        # each ingest dispatch is one traced "step" of the replay window
+        engine.ingest = tracer.wrap(engine.ingest)
     # mean micro-batch = rate * tick; --batch-size sets it via the tick
     tick = args.batch_size / args.rate
     report = replay(engine, serve_s, dst_range, rate=args.rate, tick=tick,
                     query_batch=args.query_batch, seed=args.seed,
                     late_frac=args.late_frac, max_late=args.max_late,
                     max_events=args.max_events)
+    if tracer is not None:
+        tracer.stop()
+    if runlog is not None:
+        runlog.write(
+            "serve", n_events=report.n_events, n_queries=report.n_queries,
+            n_ticks=report.n_ticks, seconds=report.seconds,
+            events_per_sec=report.events_per_sec,
+            queries_per_sec=report.queries_per_sec,
+            ingest_p50_ms=report.ingest_p50_ms,
+            ingest_p99_ms=report.ingest_p99_ms,
+            query_p50_ms=report.query_p50_ms,
+            query_p99_ms=report.query_p99_ms,
+            online_ap=report.online_ap, sim_seconds=report.sim_seconds,
+            ingest_hist=report.ingest_hist, query_hist=report.query_hist,
+            # post-warmup compile counter, keyed "kind size[ k]": any
+            # nonzero count means a live request paid a jit trace
+            post_warmup_traces={" ".join(map(str, k)): v for k, v in
+                                report.post_warmup_traces.items()})
+        runlog.close()
+        print(f"[obs] run-log written to {args.metrics_out}")
     source = (f"store {args.event_store}" if args.event_store
               else args.dataset)
     print(f"[serve] {args.model}{'-PRES' if args.pres else ''} on "
@@ -162,6 +197,18 @@ def main(argv=None):
     ap.add_argument("--checkpoint", default=None,
                     help="training checkpoint to serve "
                          "(launch/train.py --checkpoint bundle)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a JSONL run-log (docs/OBSERVABILITY.md): "
+                         "manifest + a serve record with counters, full "
+                         "log-bucketed ingest/query latency histograms, "
+                         "post-warmup trace counts, host spans and the "
+                         "kernel-dispatch table; render with "
+                         "tools/inspect_run.py")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture a jax.profiler trace of the replay "
+                         "(bounded to the first --trace-steps ticks)")
+    ap.add_argument("--trace-steps", type=int, default=8,
+                    help="tick window length for --trace-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--zoo", default=None, help="serve a zoo arch instead")
     ap.add_argument("--steps", type=int, default=16)

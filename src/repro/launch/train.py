@@ -91,6 +91,21 @@ def main(argv=None):
                          "route_overflow) for smaller exchanges")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a JSONL run-log (docs/OBSERVABILITY.md): "
+                         "manifest + per-epoch records with the device-"
+                         "accumulated telemetry series (loss, Eq. 10 "
+                         "coherence cosine, PRES prediction-error stats, "
+                         "staleness, route_overflow), GMM tracker health, "
+                         "host spans and the kernel-dispatch table; render "
+                         "with tools/inspect_run.py")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture a jax.profiler trace of the first "
+                         "--trace-steps train-step dispatches into this "
+                         "directory (bounded window; docs/OBSERVABILITY.md "
+                         "§Profiler capture)")
+    ap.add_argument("--trace-steps", type=int, default=8,
+                    help="step-dispatch window length for --trace-dir")
     args = ap.parse_args(argv)
 
     streamed = args.event_store is not None
@@ -121,7 +136,8 @@ def main(argv=None):
         dedup_embed=not args.no_dedup_embed,
         pipeline_depth=args.pipeline_depth, scan_chunk=args.scan_chunk,
         event_store=args.event_store, n_shards=args.n_shards,
-        shard_budget=args.shard_budget)
+        shard_budget=args.shard_budget,
+        obs_metrics=args.metrics_out is not None)
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_params(key, cfg)
     state = init_state(cfg)
@@ -147,8 +163,27 @@ def main(argv=None):
     # cfg.scan_chunk > 1 routes through the scan-compiled macro-batch
     # engine (repro.train.scan — chunk 1 delegates likewise). The two are
     # mutually exclusive (scan.check_schedule raises early).
-    engine = scan.ScanEngine(cfg, opt) if cfg.scan_chunk > 1 else None
+    # telemetry (docs/OBSERVABILITY.md): --metrics-out opens the JSONL
+    # run-log and turns on host-span recording; --trace-dir wraps the step
+    # dispatch in a bounded jax.profiler capture. Neither adds per-step
+    # host syncs — the obs series ride the step metrics on device.
+    runlog = None
+    if args.metrics_out:
+        from repro.obs import sink, trace as obs_trace
+        obs_trace.enable()
+        runlog = sink.RunLog(args.metrics_out, role="train", cfg=cfg,
+                             argv=argv)
+    tracer = None
+    if args.trace_dir:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.StepTraceCapture(args.trace_dir,
+                                            n_steps=args.trace_steps)
+    step_hook = tracer.wrap if tracer else None
+    engine = (scan.ScanEngine(cfg, opt, step_hook=step_hook)
+              if cfg.scan_chunk > 1 else None)
     train_step = None if engine else pipeline.make_train_step(cfg, opt)
+    if tracer is not None and train_step is not None:
+        train_step = tracer.wrap(train_step)
     eval_step = loop.make_eval_step(cfg)
 
     n_batches = train_s.num_batches(args.batch_size)
@@ -199,8 +234,27 @@ def main(argv=None):
                                           cfg, eval_step, sub, dst_range)
         history.append({"epoch": epoch, "train_ap": res.ap, "loss": res.loss,
                         "seconds": res.seconds, "val_ap": vap, "val_auc": vauc})
+        if runlog is not None:
+            from repro.obs import metrics as obs_metrics
+            rec = {"epoch": epoch, "loss": res.loss, "train_ap": res.ap,
+                   "val_ap": vap, "val_auc": vauc, "seconds": res.seconds,
+                   "route_overflow": res.route_overflow}
+            if res.obs is not None:
+                rec.update(steps=res.obs["steps"], series=res.obs["series"])
+                ev = sum(res.obs["series"].get("events", []))
+                if res.seconds > 0:
+                    rec["events_per_sec"] = ev / res.seconds
+                if "route_overflow_shards" in res.obs:
+                    rec["route_overflow_shards"] = \
+                        res.obs["route_overflow_shards"]
+            if cfg.use_pres and cfg.n_shards == 1:
+                # per-epoch tracker-health probe (one fetch, between steps)
+                rec["gmm_health"] = obs_metrics.gmm_health(state["pres"])
+            runlog.write("epoch", **rec)
         print(f"  epoch {epoch}: loss={res.loss:.4f} train_ap={res.ap:.4f} "
               f"val_ap={vap:.4f} val_auc={vauc:.4f} ({res.seconds:.1f}s)")
+    if tracer is not None:
+        tracer.stop()
     if cfg.n_shards > 1:
         # back to the natural single-device layout so checkpoints are
         # interchangeable with (and restorable by) unsharded runs
@@ -210,6 +264,12 @@ def main(argv=None):
     if args.checkpoint:
         save_checkpoint(args.checkpoint, {"params": params, "state": state})
         print(f"[ckpt] saved to {args.checkpoint}")
+    if runlog is not None:
+        # close() appends the telemetry epilogue: host spans (prefetch
+        # waits, store windowing, checkpoint IO), the kernel-dispatch
+        # table, and the end marker
+        runlog.close()
+        print(f"[obs] run-log written to {args.metrics_out}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump({"config": dataclasses.asdict(cfg), "history": history}, f,

@@ -111,6 +111,13 @@ class MDGNNConfig:
     # rows — the count is surfaced in the step metrics (route_overflow),
     # never silently dropped.
     shard_budget: int | None = None
+    # Telemetry (docs/OBSERVABILITY.md): pack the per-step obs vector
+    # (loss, Eq. 10 coherence cosine, PRES prediction-error stats,
+    # staleness, event counts) inside the jitted step and flush it once
+    # per epoch. Device-side accumulation only — the step loop performs no
+    # additional host syncs, so the knob is safe to leave on in perf runs
+    # (the CI overhead gate pins >= 0.9x events/sec).
+    obs_metrics: bool = False
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,214 @@
+"""Device-accumulated training/serving metrics (docs/OBSERVABILITY.md).
+
+The zero-sync contract: every per-step signal is packed into ONE device
+vector inside the jitted step (`pack_train_obs`, riding the metrics dict
+the engines already return), accumulated host-side as unrealised device
+arrays, and fetched exactly once per epoch (`EpochObs.finish`). With
+telemetry enabled the step loop performs zero additional `float()` /
+`np.asarray()` round-trips and the jitted step traces exactly as often as
+with telemetry off — the flush is one batched `jax.device_get` whose cost
+is independent of the number of steps. `host_fetches()` counts the
+flushes so tests can pin the contract.
+
+Also here: fixed log-spaced latency histograms (the serve replay reports
+full distributions through the sink instead of p50/p99 point estimates)
+and the PRES GMM tracker-health probe.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# The per-step train obs vector (fixed schema)
+# ---------------------------------------------------------------------------
+
+# One slot per signal; engines that lack a signal write 0. The order is
+# the on-wire schema — append only, never reorder (the sink stamps
+# `obs_fields` into the manifest so old logs stay readable).
+TRAIN_OBS_FIELDS = (
+    "loss",              # step training loss (BCE + beta * coherence)
+    "coherence_cos",     # Eq. 10 memory-coherence cosine (1 - penalty)
+    "pres_delta_mean",   # mean ||M_meas - M_pred|| over written rows (Eq. 7)
+    "pres_delta_max",    # max row norm of the same prediction error
+    "pres_delta_events", # written rows the delta stats average over
+    "staleness",         # pipeline snapshot staleness ticks (0 = sequential)
+    "events",            # valid events predicted this step
+)
+
+_FIELD_INDEX = {f: i for i, f in enumerate(TRAIN_OBS_FIELDS)}
+
+
+def pack_train_obs(**values) -> jnp.ndarray:
+    """Pack named per-step scalars into the fixed obs vector (device).
+
+    Unnamed fields default to 0; unknown names raise (schema drift must be
+    explicit — add the field to TRAIN_OBS_FIELDS)."""
+    for k in values:
+        if k not in _FIELD_INDEX:
+            raise KeyError(f"unknown obs field {k!r}; schema: "
+                           f"{TRAIN_OBS_FIELDS}")
+    return jnp.stack([jnp.asarray(values.get(f, 0.0), jnp.float32)
+                      for f in TRAIN_OBS_FIELDS])
+
+
+def unpack_series(stacked: np.ndarray) -> dict:
+    """(S, F) host array of per-step obs vectors -> {field: (S,) float list}.
+
+    Lists (not arrays) so the result drops straight into the JSONL sink."""
+    stacked = np.asarray(stacked, np.float64).reshape(-1, len(TRAIN_OBS_FIELDS))
+    return {f: [float(x) for x in stacked[:, i]]
+            for i, f in enumerate(_FIELD_INDEX)}
+
+
+def pres_delta_stats(s_pred, s_meas, written):
+    """Per-step PRES prediction-error stats over the written memory rows.
+
+    ||M_meas - M_pred|| row norms, masked to the selected (written)
+    occurrences — the δ the Eq. 8 filter is supposed to shrink. Returns
+    (mean, max, count) device scalars; all-masked steps return zeros."""
+    m = written.astype(jnp.float32)
+    err = jnp.linalg.norm(
+        (s_meas.astype(jnp.float32) - s_pred.astype(jnp.float32))
+        * m[:, None], axis=-1)
+    cnt = jnp.sum(m)
+    mean = jnp.sum(err) / jnp.maximum(cnt, 1.0)
+    return mean, jnp.max(err), cnt
+
+
+# ---------------------------------------------------------------------------
+# Per-epoch device-side accumulation (shared by all three engines)
+# ---------------------------------------------------------------------------
+
+_host_fetches = 0
+
+
+def host_fetches() -> int:
+    """Process-lifetime count of EpochObs flush fetches (test probe)."""
+    return _host_fetches
+
+
+def _fetch(tree):
+    global _host_fetches
+    _host_fetches += 1
+    return jax.device_get(tree)
+
+
+class EpochObs:
+    """Per-epoch telemetry accumulator shared by the sequential, pipelined
+    and scan-compiled engines (it replaces their three hand-rolled
+    route_overflow loops).
+
+    `step(metrics)` pops the telemetry payloads out of a train step's
+    metrics dict, keeping them as UNREALISED device values — zero host
+    syncs in the step loop. `finish()` performs the epoch's single batched
+    host fetch and returns `(route_overflow_total, obs)` where `obs` is
+    None unless the step emitted obs vectors, else a dict with the
+    per-step `series` (field -> list) and, on sharded runs, the per-shard
+    overflow totals."""
+
+    def __init__(self):
+        self._obs = []          # (F,) or (T, F) device arrays
+        self._ovf = []          # () or (T,) device overflow counts
+        self._shards = []       # (n_shards,) or (T, n_shards) device counts
+
+    def step(self, metrics: dict) -> None:
+        if "route_overflow" in metrics:
+            self._ovf.append(metrics["route_overflow"])
+        o = metrics.pop("obs", None)
+        if o is not None:
+            self._obs.append(o)
+        s = metrics.pop("route_overflow_shards", None)
+        if s is not None:
+            self._shards.append(s)
+
+    def finish(self) -> tuple[int, dict | None]:
+        if not (self._ovf or self._obs or self._shards):
+            return 0, None
+        ovf, obs, shards = _fetch((self._ovf, self._obs, self._shards))
+        total = int(sum(int(np.sum(np.asarray(x))) for x in ovf))
+        if not (obs or shards):
+            return total, None
+        out: dict = {}
+        if obs:
+            rows = np.concatenate(
+                [np.atleast_2d(np.asarray(x, np.float64)) for x in obs])
+            out["series"] = unpack_series(rows)
+            out["steps"] = int(rows.shape[0])
+        if shards:
+            per = sum(np.asarray(x, np.int64).reshape(-1, np.asarray(x).shape[-1])
+                      .sum(axis=0) for x in shards)
+            out["route_overflow_shards"] = [int(x) for x in per]
+        return total, out
+
+
+# ---------------------------------------------------------------------------
+# Fixed log-spaced latency histograms
+# ---------------------------------------------------------------------------
+
+def log_bucket_edges(lo: float, hi: float, n: int) -> np.ndarray:
+    """n log-spaced bucket edges over [lo, hi] -> (n+1,) float64, strictly
+    increasing. Fixed edges (not data-dependent) so histograms from
+    different runs/roles merge bucket-by-bucket."""
+    if not (lo > 0 and hi > lo and n >= 1):
+        raise ValueError(f"need 0 < lo < hi and n >= 1, got {lo}, {hi}, {n}")
+    return np.geomspace(lo, hi, n + 1)
+
+
+# The shared serving-latency bucket table: 0.01 ms .. 10 s, 8 buckets per
+# decade. Schema-stable — the sink stamps the edges into every histogram
+# record anyway, so readers never depend on this constant.
+LATENCY_EDGES_MS = log_bucket_edges(1e-2, 1e4, 48)
+
+
+def latency_hist(seconds, edges_ms: np.ndarray = LATENCY_EDGES_MS) -> dict:
+    """Bucket a list of wall-clock durations (seconds) into fixed
+    log-spaced millisecond buckets. Under/overflow clamp into the end
+    buckets so counts always sum to len(seconds)."""
+    ms = np.asarray(seconds, np.float64) * 1e3
+    ms = np.clip(ms, edges_ms[0], np.nextafter(edges_ms[-1], 0))
+    counts, _ = np.histogram(ms, bins=edges_ms)
+    return {"edges_ms": [float(e) for e in edges_ms],
+            "counts": [int(c) for c in counts],
+            "n": int(ms.size)}
+
+
+def hist_percentile(hist: dict, q: float) -> float:
+    """Upper-edge percentile estimate from a `latency_hist` dict (ms).
+    Conservative: returns the upper edge of the bucket holding the q-th
+    sample, 0.0 for an empty histogram."""
+    counts = np.asarray(hist["counts"], np.int64)
+    total = counts.sum()
+    if total == 0:
+        return 0.0
+    target = np.ceil(q / 100.0 * total)
+    cum = np.cumsum(counts)
+    idx = int(np.searchsorted(cum, target))
+    return float(hist["edges_ms"][idx + 1])
+
+
+# ---------------------------------------------------------------------------
+# GMM tracker health (PRES variance trackers, Eq. 9)
+# ---------------------------------------------------------------------------
+
+def gmm_health(pres_state) -> dict:
+    """Variance-tracker health probe from the PRES GMM state: how much of
+    the node space the trackers have observed and how spread the tracked
+    delta distribution is. One device computation + one fetch — call it
+    per epoch (between steps), never inside the step loop."""
+    alpha, mu, var = pres_state.gmm()
+    per_node = jnp.sum(pres_state.n, axis=1)            # (N,)
+    tracked = per_node > 0
+    denom = jnp.maximum(jnp.sum(tracked), 1)
+    w = tracked.astype(jnp.float32)[:, None, None]
+    vals = _fetch({
+        "tracked_fraction": jnp.mean(tracked.astype(jnp.float32)),
+        "observations": jnp.sum(per_node),
+        "mean_abs_mu": jnp.sum(jnp.abs(mu) * w) / (denom * mu.shape[1]
+                                                   * mu.shape[2]),
+        "mean_var": jnp.sum(var * w) / (denom * var.shape[1] * var.shape[2]),
+        "max_var": jnp.max(var),
+    })
+    return {k: float(v) for k, v in vals.items()}

@@ -1,0 +1,148 @@
+"""Named-span stage tracing (docs/OBSERVABILITY.md §Spans).
+
+Two kinds of spans, matching the two halves of a training/serving step:
+
+* `stage(name)` — a `jax.named_scope` for the jitted pipeline stages
+  (`sample -> route -> memory_update -> embed -> loss -> apply`). Names
+  land in the HLO and show up in `jax.profiler` traces; at runtime the
+  annotation is free, so stages are always on.
+* `span(name)`  — a host wall-clock span for the non-jitted stages
+  (prefetch waits, event-store window mapping, checkpoint IO, eval).
+  Recording is gated by `enable()`: disabled (the default) a span is a
+  no-op with no timer reads, so instrumented hot paths cost nothing
+  unless a run asked for telemetry. When the `jax.profiler` is active the
+  span additionally emits a `TraceAnnotation`, so host stages line up
+  with device activity in the captured trace.
+
+`StepTraceCapture` wraps a jitted step callable and captures a real
+`jax.profiler` trace for a bounded step window (`--trace-dir` /
+`--trace-steps` in the launch CLIs), each step bracketed by a
+`StepTraceAnnotation`.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+import time
+
+import jax
+
+_lock = threading.Lock()
+_enabled = False
+_spans: list[dict] = []
+_t0 = 0.0
+
+
+def stage(name: str):
+    """Named scope for a jitted pipeline stage (free at runtime)."""
+    return jax.named_scope(name)
+
+
+def enable() -> None:
+    """Start recording host spans (timestamps relative to this call)."""
+    global _enabled, _t0
+    with _lock:
+        _spans.clear()
+        _t0 = time.perf_counter()
+        _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    with _lock:
+        _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def drain() -> list[dict]:
+    """Return and clear the recorded spans ([{name, t0, dur_s}, ...])."""
+    with _lock:
+        out, _spans[:] = list(_spans), []
+    return out
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Host wall-clock span. No-op (no timer reads) unless `enable()`d.
+    Safe from any thread — the prefetch producer records through the same
+    collector as the main thread."""
+    if not _enabled:
+        yield
+        return
+    start = time.perf_counter()
+    with jax.profiler.TraceAnnotation(name):
+        try:
+            yield
+        finally:
+            dur = time.perf_counter() - start
+            with _lock:
+                if _enabled:
+                    _spans.append({"name": name, "t0": start - _t0,
+                                   "dur_s": dur})
+
+
+def span_summary(spans: list[dict]) -> dict:
+    """Aggregate drained spans per name: {name: {count, total_s, max_s}}."""
+    out: dict = {}
+    for s in spans:
+        agg = out.setdefault(s["name"], {"count": 0, "total_s": 0.0,
+                                         "max_s": 0.0})
+        agg["count"] += 1
+        agg["total_s"] += s["dur_s"]
+        agg["max_s"] = max(agg["max_s"], s["dur_s"])
+    return out
+
+
+class StepTraceCapture:
+    """Capture a `jax.profiler` trace for the first `n_steps` invocations
+    of a wrapped step callable.
+
+    trace = StepTraceCapture("/tmp/trace", n_steps=8)
+    step = trace.wrap(step)          # per-call StepTraceAnnotation
+    ... run the epoch ...
+    trace.stop()                     # idempotent; also stops at step n
+
+    The window is bounded so `--trace-dir` on a long run captures a
+    steady-state slice instead of gigabytes of events; the trace starts at
+    the first wrapped call, which on warm-compiled runs is already past
+    the compile."""
+
+    def __init__(self, trace_dir: str, n_steps: int = 8):
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        self.trace_dir = trace_dir
+        self.n_steps = n_steps
+        self._calls = 0
+        self._active = False
+
+    def wrap(self, fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kw):
+            i = self._calls
+            self._calls += 1
+            if i == 0:
+                jax.profiler.start_trace(self.trace_dir)
+                self._active = True
+            if not self._active:
+                return fn(*args, **kw)
+            with jax.profiler.StepTraceAnnotation("step", step_num=i):
+                out = fn(*args, **kw)
+            if self._calls >= self.n_steps:
+                self.stop(block_on=out)
+            return out
+
+        return wrapped
+
+    def stop(self, block_on=None) -> None:
+        """Stop the capture (no-op if never started / already stopped).
+        `block_on` is synced first so the traced window contains the
+        device work the last wrapped dispatch enqueued."""
+        if self._active:
+            if block_on is not None:
+                jax.block_until_ready(block_on)
+            jax.profiler.stop_trace()
+            self._active = False

@@ -39,6 +39,7 @@ from repro.checkpoint import io as checkpoint_io
 from repro.graph.events import EventBatch
 from repro.models import mdgnn, modules
 from repro.models.mdgnn import MDGNNConfig
+from repro.obs import trace as obs_trace
 from repro.serve.batcher import MicroBatcher
 from repro.train import loop as loop_lib
 
@@ -95,52 +96,57 @@ class ServeEngine:
 
     def _ingest_body(self, params, state, batch: EventBatch):
         self.trace_counts[("ingest", batch.size)] += 1
-        mem2, info, fused, delta = loop_lib.memory_and_pres(
-            params, self.cfg, state, batch, gru_fn=self._gru_fn)
-        state2 = dict(state, memory=mem2)
-        aux = {"delta": delta, "info_nodes": info["nodes"],
-               "info_selected": info["selected"], "info_mask": info["mask"]}
-        # maintain_state updates neighbours + mailbox always, and the PRES
-        # trackers iff cfg.use_pres — masking use_pres freezes the trackers
-        # (the eval-parity mode) without touching the rest
-        mcfg = (self.cfg if self.track_deltas
-                else dataclasses.replace(self.cfg, use_pres=False))
-        return loop_lib.maintain_state(mcfg, params, state2, aux, batch)
+        with obs_trace.stage("serve_ingest"):
+            mem2, info, fused, delta = loop_lib.memory_and_pres(
+                params, self.cfg, state, batch, gru_fn=self._gru_fn)
+            state2 = dict(state, memory=mem2)
+            aux = {"delta": delta, "info_nodes": info["nodes"],
+                   "info_selected": info["selected"],
+                   "info_mask": info["mask"]}
+            # maintain_state updates neighbours + mailbox always, and the
+            # PRES trackers iff cfg.use_pres — masking use_pres freezes the
+            # trackers (the eval-parity mode) without touching the rest
+            mcfg = (self.cfg if self.track_deltas
+                    else dataclasses.replace(self.cfg, use_pres=False))
+            return loop_lib.maintain_state(mcfg, params, state2, aux, batch)
 
     def _query_body(self, params, state, src, dst, t):
         self.trace_counts[("query", src.shape[0])] += 1
-        b = src.shape[0]
-        # one batched embedding call for both endpoint sets, exactly the
-        # loop.endpoint_logits layout (per-node embeddings are independent,
-        # so the coalesced call matches pairwise scoring bit-for-bit)
-        h = mdgnn.embed_nodes(params, self.cfg, state,
-                              jnp.concatenate([src, dst]),
-                              jnp.concatenate([t, t]))
-        return mdgnn.link_logits(params, h[:b], h[b:])
+        with obs_trace.stage("serve_query"):
+            b = src.shape[0]
+            # one batched embedding call for both endpoint sets, exactly the
+            # loop.endpoint_logits layout (per-node embeddings are
+            # independent, so the coalesced call matches pairwise scoring
+            # bit-for-bit)
+            h = mdgnn.embed_nodes(params, self.cfg, state,
+                                  jnp.concatenate([src, dst]),
+                                  jnp.concatenate([t, t]))
+            return mdgnn.link_logits(params, h[:b], h[b:])
 
     def _topk_body(self, params, state, src, t, *, k: int):
         self.trace_counts[("topk", src.shape[0], k)] += 1
-        lo, hi = self.item_range
-        items = jnp.arange(lo, hi, dtype=jnp.int32)
-        # item-side embeddings are shared across the coalesced query batch,
-        # computed once at the batch's latest timestamp
-        t_item = jnp.full((hi - lo,), jnp.max(t), jnp.float32)
-        h = mdgnn.embed_nodes(params, self.cfg, state,
-                              jnp.concatenate([src, items]),
-                              jnp.concatenate([t, t_item]))
-        h_src, h_items = h[:src.shape[0]], h[src.shape[0]:]
-        dec = params["dec"]
-        if self.cfg.use_kernels:
-            from repro.kernels import ops as kops
-            scores = kops.link_score(h_src, h_items, dec["w1"], dec["b1"],
-                                     dec["w2"], dec["b2"],
-                                     mode=self.cfg.kernels_mode)
-        else:
-            from repro.kernels import ref
-            scores = ref.link_score_ref(h_src, h_items, dec["w1"],
-                                        dec["b1"], dec["w2"], dec["b2"])
-        vals, idx = jax.lax.top_k(scores, k)
-        return vals, (idx + lo).astype(jnp.int32)
+        with obs_trace.stage("serve_topk"):
+            lo, hi = self.item_range
+            items = jnp.arange(lo, hi, dtype=jnp.int32)
+            # item-side embeddings are shared across the coalesced query
+            # batch, computed once at the batch's latest timestamp
+            t_item = jnp.full((hi - lo,), jnp.max(t), jnp.float32)
+            h = mdgnn.embed_nodes(params, self.cfg, state,
+                                  jnp.concatenate([src, items]),
+                                  jnp.concatenate([t, t_item]))
+            h_src, h_items = h[:src.shape[0]], h[src.shape[0]:]
+            dec = params["dec"]
+            if self.cfg.use_kernels:
+                from repro.kernels import ops as kops
+                scores = kops.link_score(h_src, h_items, dec["w1"], dec["b1"],
+                                         dec["w2"], dec["b2"],
+                                         mode=self.cfg.kernels_mode)
+            else:
+                from repro.kernels import ref
+                scores = ref.link_score_ref(h_src, h_items, dec["w1"],
+                                            dec["b1"], dec["w2"], dec["b2"])
+            vals, idx = jax.lax.top_k(scores, k)
+            return vals, (idx + lo).astype(jnp.int32)
 
     def _get_topk_fn(self, k: int):
         fn = self._topk_fns.get(k)

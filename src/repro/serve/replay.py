@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.graph import events as events_lib
 from repro.graph.events import EventStream
+from repro.obs import metrics as obs_metrics
 from repro.serve.engine import ServeEngine
 from repro.utils import metrics as metrics_lib
 
@@ -47,6 +48,12 @@ class ReplayReport:
     # (kind, size) key: any non-empty dict means a live request paid a
     # compile and the latency percentiles above are polluted by it
     post_warmup_traces: dict = dataclasses.field(default_factory=dict)
+    # full latency distributions over fixed log-spaced ms buckets
+    # (obs.metrics.latency_hist: {"edges_ms", "counts", "n"}) — the sink
+    # records these so run-logs carry the whole shape, not two point
+    # estimates; bucket-aligned across runs/roles by construction
+    ingest_hist: dict = dataclasses.field(default_factory=dict)
+    query_hist: dict = dataclasses.field(default_factory=dict)
 
 
 def _pctl(xs, q):
@@ -134,4 +141,6 @@ def replay(engine: ServeEngine, stream: EventStream, dst_range, *,
         post_warmup_traces={
             k: c - warm_traces.get(k, 0)
             for k, c in engine.trace_counts.items()
-            if c > warm_traces.get(k, 0)})
+            if c > warm_traces.get(k, 0)},
+        ingest_hist=obs_metrics.latency_hist(ingest_times),
+        query_hist=obs_metrics.latency_hist(query_times))

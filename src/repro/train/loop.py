@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batching, coherence, pres
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train import annotate
 from repro.graph.events import EventBatch, EventStream
 from repro.graph.negatives import sample_negatives
@@ -226,6 +228,29 @@ def maintain_state(cfg: MDGNNConfig, params, state2, aux,
     return state2
 
 
+def _obs_step_stats(params, cfg: MDGNNConfig, info, fused, loss, pen,
+                    pos: EventBatch, staleness=0.0):
+    """Per-step telemetry vector, computed on device inside the jitted step
+    (docs/OBSERVABILITY.md §Metrics). The PRES prediction error is recovered
+    from values every engine already has in hand: Eq. 8 gives
+    s_meas - s_pred = (s_meas - fused) / (1 - gamma), so the delta row norms
+    cost one elementwise pass — no extra table gathers, identical in the
+    jnp, fused-kernel and sharded paths."""
+    written = info["selected"] & info["mask"]
+    d_mean = d_max = d_cnt = 0.0
+    if cfg.use_pres:
+        gamma = jax.nn.sigmoid(params["pres"]["gamma_logit"])
+        inv = 1.0 / jnp.maximum(1.0 - gamma, 1e-6)
+        d_mean, d_max, d_cnt = obs_metrics.pres_delta_stats(
+            fused, info["s_meas"], written)
+        d_mean, d_max = d_mean * inv, d_max * inv
+    return jax.lax.stop_gradient(obs_metrics.pack_train_obs(
+        loss=loss, coherence_cos=1.0 - pen,
+        pres_delta_mean=d_mean, pres_delta_max=d_max,
+        pres_delta_events=d_cnt, staleness=staleness,
+        events=jnp.sum(pos.mask.astype(jnp.float32))))
+
+
 def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
     """Un-jitted train-step body, shared by every trainer that runs the
     lag-one recurrence: the sequential jitted step below, the scan-compiled
@@ -240,8 +265,9 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
 
     def loss_and_state(params, state, prev_batch: EventBatch,
                        pos: EventBatch, neg: EventBatch):
-        mem2, info, fused, delta = memory_and_pres(params, cfg, state,
-                                                   prev_batch, gru_fn=gru_fn)
+        with obs_trace.stage("memory_update"):
+            mem2, info, fused, delta = memory_and_pres(
+                params, cfg, state, prev_batch, gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         # ------------------------------------------------ link prediction --
         # sharded runs: the (unchanged) embedding stack reads a replicated
@@ -251,15 +277,18 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
             embed_state = routing.natural_state_view(cfg, state2)
         else:
             embed_state = state2
-        logit_p, logit_n = endpoint_logits(params, cfg, embed_state, pos, neg)
-        loss = link_bce(logit_p, logit_n, pos.mask, neg.mask)
-        # ------------------------------------------- coherence smoothing ---
-        pen = coherence.coherence_penalty(info["s_prev"], fused,
-                                          mask=info["selected"] & info["mask"])
-        use_smooth = (cfg.use_smoothing if cfg.use_smoothing is not None
-                      else cfg.use_pres)
-        if use_smooth and cfg.beta:
-            loss = loss + cfg.beta * pen
+        with obs_trace.stage("embed"):
+            logit_p, logit_n = endpoint_logits(params, cfg, embed_state,
+                                               pos, neg)
+        with obs_trace.stage("loss"):
+            loss = link_bce(logit_p, logit_n, pos.mask, neg.mask)
+            # --------------------------------------- coherence smoothing ---
+            pen = coherence.coherence_penalty(
+                info["s_prev"], fused, mask=info["selected"] & info["mask"])
+            use_smooth = (cfg.use_smoothing if cfg.use_smoothing is not None
+                          else cfg.use_pres)
+            if use_smooth and cfg.beta:
+                loss = loss + cfg.beta * pen
         aux = {
             "logit_p": logit_p, "logit_n": logit_n,
             "coherence_penalty": pen,
@@ -269,13 +298,21 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
         }
         if "route_overflow" in info:
             aux["route_overflow"] = info["route_overflow"]
+        if cfg.obs_metrics:
+            aux["obs"] = _obs_step_stats(params, cfg, info, fused, loss, pen,
+                                         pos)
+            if "route_overflow_shards" in info:
+                aux["route_overflow_shards"] = jax.lax.stop_gradient(
+                    info["route_overflow_shards"])
         return loss, (state2, aux)
 
     def train_step(params, opt_state, state, prev_batch, pos, neg):
         (loss, (state2, aux)), grads = jax.value_and_grad(
             loss_and_state, has_aux=True)(params, state, prev_batch, pos, neg)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        with obs_trace.stage("apply"):
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
         # ------------------------- non-differentiable state maintenance ----
         state2 = maintain_state(cfg, params, state2, aux, prev_batch)
         metrics = {"loss": loss, "coherence_penalty": aux["coherence_penalty"],
@@ -284,6 +321,9 @@ def make_step_body(cfg: MDGNNConfig, opt, gru_fn=None):
             # budget-masked valid rows this step (docs/DISTRIBUTED.md
             # §Budget) — zero unless cfg.shard_budget was tightened
             metrics["route_overflow"] = aux["route_overflow"]
+        for k in ("obs", "route_overflow_shards"):
+            if k in aux:
+                metrics[k] = aux[k]
         return params, opt_state, state2, metrics
 
     return train_step
@@ -378,6 +418,10 @@ class EpochResult:
     # rows — nonzero only when cfg.shard_budget was tightened below the
     # overflow-free default (docs/DISTRIBUTED.md §Budget)
     route_overflow: int = 0
+    # cfg.obs_metrics runs: per-step telemetry series fetched in the
+    # epoch's single flush — {"series": {field: [floats]}, "steps": int,
+    # "route_overflow_shards": [ints] (sharded only)} (obs.metrics)
+    obs: dict | None = None
 
 
 def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
@@ -390,7 +434,8 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     sync); logits are pulled to numpy as they arrive so device memory stays
     bounded at one step's worth."""
     t0 = time.perf_counter()
-    losses, pos_all, neg_all, ovf = [], [], [], []
+    losses, pos_all, neg_all = [], [], []
+    obs = obs_metrics.EpochObs()
     it = iter(batches)
     try:
         prev_batch = next(it)
@@ -402,8 +447,7 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
             losses.append(m["loss"])                   # device scalar
             pos_all.append(np.asarray(m["logit_p"]))
             neg_all.append(np.asarray(m["logit_n"]))
-            if "route_overflow" in m:
-                ovf.append(m["route_overflow"])        # device scalar
+            obs.step(m)                                # device values only
             prev_batch = batch
     finally:
         # stop a PrefetchIterator's producer thread if the epoch aborts
@@ -411,6 +455,7 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
         if close is not None:
             close()
     losses = [float(x) for x in losses]                # one host sync
+    route_overflow, obs_out = obs.finish()             # one more (batched)
     ap = metrics_lib.average_precision(np.concatenate(pos_all),
                                        np.concatenate(neg_all))
     aps = [metrics_lib.average_precision(p, n) for p, n in zip(pos_all, neg_all)] \
@@ -418,7 +463,7 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     dt = time.perf_counter() - t0
     return params, opt_state, state, EpochResult(
         ap, float(np.mean(losses)), dt, aps,
-        route_overflow=int(sum(int(x) for x in ovf)))
+        route_overflow=route_overflow, obs=obs_out)
 
 
 def evaluate(params, state, batches, cfg: MDGNNConfig, eval_step, key, dst_range):

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coherence, pres
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.graph.events import EventBatch
 from repro.graph.negatives import sample_negatives
 from repro.models import modules
@@ -153,8 +155,9 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
                        prev_batch: EventBatch, pos: EventBatch,
                        neg: EventBatch):
         # --------- MEMORY stage (live) — kernel routing in memory_and_pres
-        mem2, info, fused, delta = loop_lib.memory_and_pres(
-            params, cfg, state, prev_batch, gru_fn=gru_fn)
+        with obs_trace.stage("memory_update"):
+            mem2, info, fused, delta = loop_lib.memory_and_pres(
+                params, cfg, state, prev_batch, gru_fn=gru_fn)
         state2 = dict(state, memory=mem2)
         # ------------------------------- staleness accounting + read view --
         # Sharded runs (cfg.n_shards > 1): the snapshot lives in NATURAL
@@ -181,14 +184,16 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
         embed_state = dict(embed_base, memory=MemoryState(
             mem=read_tab, last_update=pstate.read_last_update))
         # --------------------------------------- EMBEDDING stage (stale) --
-        logit_p, logit_n = loop_lib.endpoint_logits(params, cfg, embed_state,
-                                                    pos, neg)
-        loss = loop_lib.link_bce(logit_p, logit_n, pos.mask, neg.mask)
-        pen = coherence.coherence_penalty(info["s_prev"], fused,
-                                          mask=info["selected"] & info["mask"])
-        # use_smooth/beta validated at builder scope: the coherence term is
-        # the pipelined step's only gradient path to the memory params
-        loss = loss + cfg.beta * pen
+        with obs_trace.stage("embed"):
+            logit_p, logit_n = loop_lib.endpoint_logits(params, cfg,
+                                                        embed_state, pos, neg)
+        with obs_trace.stage("loss"):
+            loss = loop_lib.link_bce(logit_p, logit_n, pos.mask, neg.mask)
+            pen = coherence.coherence_penalty(
+                info["s_prev"], fused, mask=info["selected"] & info["mask"])
+            # use_smooth/beta validated at builder scope: the coherence term
+            # is the pipelined step's only gradient path to the memory params
+            loss = loss + cfg.beta * pen
         # ------------------------------------------- snapshot refresh lag --
         refresh = (pstate.tick + 1) >= cfg.pipeline_depth
         pstate2 = PipelineState(
@@ -207,15 +212,25 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
         }
         if "route_overflow" in info:
             aux["route_overflow"] = info["route_overflow"]
+        if cfg.obs_metrics:
+            # staleness slot: batch-writes missing from the snapshot this
+            # step's embed read (incl. the current in-flight write), in [1, K]
+            aux["obs"] = loop_lib._obs_step_stats(
+                params, cfg, info, fused, loss, pen, pos,
+                staleness=(pstate.tick + 1).astype(jnp.float32))
+            if "route_overflow_shards" in info:
+                aux["route_overflow_shards"] = jax.lax.stop_gradient(
+                    info["route_overflow_shards"])
         return loss, (state2, pstate2, aux)
 
     def train_step(params, opt_state, state, pstate, prev_batch, pos, neg):
         (loss, (state2, pstate2, aux)), grads = jax.value_and_grad(
             loss_and_state, has_aux=True)(params, state, pstate,
                                           prev_batch, pos, neg)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
-                              params, updates)
+        with obs_trace.stage("apply"):
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
         state2 = loop_lib.maintain_state(cfg, params, state2, aux, prev_batch)
         pstate2 = jax.lax.stop_gradient(pstate2)
         metrics = {"loss": loss, "coherence_penalty": aux["coherence_penalty"],
@@ -225,6 +240,9 @@ def make_pipelined_train_step(cfg: MDGNNConfig, opt, gru_fn=None):
                    "staleness": pstate.tick + 1}
         if "route_overflow" in aux:
             metrics["route_overflow"] = aux["route_overflow"]
+        for k in ("obs", "route_overflow_shards"):
+            if k in aux:
+                metrics[k] = aux[k]
         return params, opt_state, state2, pstate2, metrics
 
     # donate the carry buffers (opt state, model state, snapshot) so XLA
@@ -269,7 +287,8 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
         pstate = routing.replicate(PipelineState.init(mem0), cfg.n_shards)
     else:
         pstate = PipelineState.init(state["memory"])
-    losses, pos_all, neg_all, ovf = [], [], [], []
+    losses, pos_all, neg_all = [], [], []
+    obs = obs_metrics.EpochObs()
     it = iter(batches)
     try:
         prev_batch = next(it)
@@ -281,8 +300,7 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
             losses.append(m["loss"])
             pos_all.append(m["logit_p"])
             neg_all.append(m["logit_n"])
-            if "route_overflow" in m:
-                ovf.append(m["route_overflow"])
+            obs.step(m)
             prev_batch = batch
     finally:
         # stop a PrefetchIterator's producer thread if the epoch aborts
@@ -293,6 +311,7 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     losses = [float(x) for x in losses]
     pos_all = [np.asarray(x) for x in pos_all]
     neg_all = [np.asarray(x) for x in neg_all]
+    route_overflow, obs_out = obs.finish()
     ap = metrics_lib.average_precision(np.concatenate(pos_all),
                                        np.concatenate(neg_all))
     aps = [metrics_lib.average_precision(p, n)
@@ -300,4 +319,4 @@ def run_epoch(params, opt_state, state, batches, cfg: MDGNNConfig,
     dt = time.perf_counter() - t0
     return params, opt_state, state, loop_lib.EpochResult(
         ap, float(np.mean(losses)), dt, aps,
-        route_overflow=int(sum(int(x) for x in ovf)))
+        route_overflow=route_overflow, obs=obs_out)

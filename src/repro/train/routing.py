@@ -425,7 +425,11 @@ def sharded_memory_and_pres(params, cfg: MDGNNConfig, state, prev_batch,
     info = {"nodes": nodes[:m], "selected": sel[:m], "mask": mask[:m],
             "s_prev": s_prev[:m], "s_meas": s_meas[:m],
             "t_prev": t_prev[:m], "t_now": times[:m], "msgs": msgs[:m],
-            "route_overflow": jnp.sum(overflow)}
+            "route_overflow": jnp.sum(overflow),
+            # per-shard counts (n_shards,) — the telemetry layer surfaces
+            # these as the shard-imbalance signal (docs/OBSERVABILITY.md);
+            # step bodies thread them out only when cfg.obs_metrics
+            "route_overflow_shards": overflow}
     return (MemoryState(mem=new_mem, last_update=new_lu), info,
             fused[:m], delta[:m])
 

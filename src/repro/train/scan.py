@@ -41,6 +41,7 @@ import numpy as np
 from repro.graph.events import EventBatch, iter_macro_batches
 from repro.graph.negatives import sample_negatives_in
 from repro.models.mdgnn import MDGNNConfig
+from repro.obs import metrics as obs_metrics
 from repro.train import loop as loop_lib
 from repro.utils import metrics as metrics_lib
 
@@ -110,11 +111,15 @@ class ScanEngine:
             params, opt_state, state, batches, key, dst_range)
     """
 
-    def __init__(self, cfg: MDGNNConfig, opt, gru_fn=None):
+    def __init__(self, cfg: MDGNNConfig, opt, gru_fn=None, step_hook=None):
         check_schedule(cfg)
         self.cfg = cfg
         self.opt = opt
         self.gru_fn = gru_fn
+        # optional wrapper applied around each compiled step callable —
+        # the launch CLI's bounded jax.profiler capture
+        # (obs.trace.StepTraceCapture.wrap) hooks in here
+        self.step_hook = step_hook
         # per-instance cache (NOT lru_cache on the method, which would pin
         # every engine + its executables in a class-level cache for the
         # process lifetime): one jitted callable per dst_range serves every
@@ -123,14 +128,18 @@ class ScanEngine:
 
     def _macro_step(self, dst_range):
         if dst_range not in self._steps:
-            self._steps[dst_range] = make_macro_step(
-                self.cfg, self.opt, dst_range, gru_fn=self.gru_fn)
+            step = make_macro_step(self.cfg, self.opt, dst_range,
+                                   gru_fn=self.gru_fn)
+            if self.step_hook is not None:
+                step = self.step_hook(step)
+            self._steps[dst_range] = step
         return self._steps[dst_range]
 
     @functools.cached_property
     def _seq_step(self):
-        return loop_lib.make_train_step(self.cfg, self.opt,
+        step = loop_lib.make_train_step(self.cfg, self.opt,
                                         gru_fn=self.gru_fn)
+        return step if self.step_hook is None else self.step_hook(step)
 
     def run_epoch(self, params, opt_state, state, batches, key, dst_range,
                   collect_logits=False):
@@ -142,7 +151,8 @@ class ScanEngine:
                                       collect_logits=collect_logits)
         t0 = time.perf_counter()
         step = self._macro_step(tuple(dst_range))
-        losses, pos_all, neg_all, ovf = [], [], [], []
+        losses, pos_all, neg_all = [], [], []
+        obs = obs_metrics.EpochObs()
         it = iter_macro_batches(batches, self.cfg.scan_chunk)
         try:
             for macro in it:
@@ -151,13 +161,13 @@ class ScanEngine:
                 losses.append(m["loss"])              # (T,) device
                 pos_all.append(np.asarray(m["logit_p"]))   # (T, b)
                 neg_all.append(np.asarray(m["logit_n"]))
-                if "route_overflow" in m:
-                    ovf.append(m["route_overflow"])   # (T,) device
+                obs.step(m)          # stacked (T,) / (T, F) device chunks
         finally:
             close = getattr(it, "close", None)
             if close is not None:
                 close()
         losses = np.concatenate([np.asarray(x) for x in losses])
+        route_overflow, obs_out = obs.finish()
         pos_rows = [p for chunk in pos_all for p in chunk]
         neg_rows = [n for chunk in neg_all for n in chunk]
         ap = metrics_lib.average_precision(np.concatenate(pos_rows),
@@ -167,5 +177,4 @@ class ScanEngine:
         dt = time.perf_counter() - t0
         return params, opt_state, state, loop_lib.EpochResult(
             ap, float(np.mean(losses)), dt, aps,
-            route_overflow=int(sum(int(np.sum(np.asarray(x)))
-                                   for x in ovf)))
+            route_overflow=route_overflow, obs=obs_out)

@@ -1,0 +1,287 @@
+#!/usr/bin/env python
+"""Run inspector: render a JSONL run-log into a terminal/markdown report
+(docs/OBSERVABILITY.md §Inspector).
+
+Input is the run-log the launch CLIs write with `--metrics-out`
+(obs.sink.RunLog): manifest first line, per-epoch / serve records, then
+the span + kernel-dispatch epilogue. The report covers, when present:
+
+* manifest summary (role, backend, kernel policy, git commit, cfg digest)
+* per-epoch table + ASCII throughput curve (events/sec)
+* PRES prediction-error percentiles (p50/p90/p99/max of the per-step
+  ||M_meas - M_pred|| means), coherence-cosine range, GMM tracker health
+* pipeline staleness histogram and route-overflow counters (per shard on
+  distributed runs)
+* serve counters + log-bucketed ingest/query latency histograms with
+  upper-edge percentile estimates, and post-warmup trace counts
+* host-span summary and the kernel-dispatch table (which execution-policy
+  branch each registered kernel actually took)
+
+Usage:  PYTHONPATH=src python tools/inspect_run.py RUNLOG [RUNLOG ...]
+Exits non-zero if a file cannot be parsed as a run-log.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs import sink  # noqa: E402
+
+BAR_W = 40
+
+
+def _bar(frac: float, width: int = BAR_W) -> str:
+    n = int(round(max(0.0, min(1.0, frac)) * width))
+    return "#" * n + "." * (width - n)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(rows: list[dict], cols: list[str]) -> list[str]:
+    cells = [[_fmt(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(row[i]) for row in cells)) if cells
+              else len(c) for i, c in enumerate(cols)]
+    out = ["| " + " | ".join(c.ljust(w) for c, w in zip(cols, widths)) + " |",
+           "|-" + "-|-".join("-" * w for w in widths) + "-|"]
+    for row in cells:
+        out.append("| " + " | ".join(c.ljust(w) for c, w in zip(row, widths))
+                   + " |")
+    return out
+
+
+def _percentiles(xs, qs=(50, 90, 99)) -> dict:
+    a = np.asarray(xs, np.float64)
+    out = {f"p{q}": float(np.percentile(a, q)) for q in qs}
+    out["max"] = float(a.max())
+    return out
+
+
+def render_manifest(man: dict) -> list[str]:
+    meta = man.get("meta", {})
+    lines = [f"# Run report — role: {man.get('role', '?')}", ""]
+    lines.append(f"- jax {meta.get('jax')} / jaxlib {meta.get('jaxlib')} "
+                 f"on backend `{meta.get('backend')}` "
+                 f"({meta.get('device_count')} device(s))")
+    lines.append(f"- kernels: default mode `{meta.get('kernels_default_mode')}`"
+                 f", env mode `{meta.get('kernels_env_mode')}`, "
+                 f"{meta.get('autotune_entries')} autotune entries")
+    commit = meta.get("git_commit")
+    lines.append(f"- git commit: `{commit[:12] if commit else 'unknown'}`"
+                 + (f", cfg digest `{meta.get('cfg_digest')}`"
+                    if meta.get("cfg_digest") else ""))
+    cfg = man.get("cfg", {})
+    if cfg:
+        knobs = {k: cfg[k] for k in ("variant", "use_pres", "use_kernels",
+                                     "pipeline_depth", "scan_chunk",
+                                     "n_shards", "obs_metrics") if k in cfg}
+        lines.append("- cfg: " + ", ".join(f"{k}={v}"
+                                           for k, v in knobs.items()))
+    if man.get("argv"):
+        lines.append(f"- argv: `{' '.join(man['argv'])}`")
+    return lines + [""]
+
+
+def render_epochs(epochs: list[dict]) -> list[str]:
+    lines = ["## Epochs", ""]
+    cols = ["epoch", "loss", "train_ap", "val_ap", "seconds",
+            "events_per_sec", "route_overflow"]
+    lines += _table(epochs, [c for c in cols
+                             if any(c in e for e in epochs)])
+    rates = [e.get("events_per_sec") for e in epochs
+             if e.get("events_per_sec")]
+    if rates:
+        lines += ["", "### Throughput (events/sec)", "```"]
+        top = max(rates)
+        for e in epochs:
+            r = e.get("events_per_sec")
+            if r:
+                lines.append(f"epoch {e['epoch']:>3} | "
+                             f"{_bar(r / top)} {r:,.0f}")
+        lines.append("```")
+    return lines + [""]
+
+
+def render_series(epochs: list[dict]) -> list[str]:
+    series: dict = {}
+    for e in epochs:
+        for k, v in e.get("series", {}).items():
+            series.setdefault(k, []).extend(v)
+    if not series:
+        return []
+    lines: list[str] = []
+    # -------- PRES prediction error delta (Eq. 7-8) --------------------
+    dmean = [x for x, c in zip(series.get("pres_delta_mean", []),
+                               series.get("pres_delta_events", []))
+             if c > 0]
+    if dmean:
+        p = _percentiles(dmean)
+        lines += ["## PRES prediction error  ‖M_meas − M_pred‖", "",
+                  "Per-step mean over written rows:", ""]
+        lines += _table([p], ["p50", "p90", "p99", "max"])
+        dmax = series.get("pres_delta_max", [])
+        if dmax:
+            lines.append(f"\nWorst single row across the run: "
+                         f"{max(dmax):.4g}")
+        lines.append("")
+    # -------- coherence cosine (Eq. 10) --------------------------------
+    cos = series.get("coherence_cos", [])
+    if cos:
+        lines += ["## Memory-coherence cosine (Eq. 10)", "",
+                  f"min {min(cos):.4f} / mean {np.mean(cos):.4f} / "
+                  f"max {max(cos):.4f} over {len(cos)} steps", ""]
+    # -------- staleness histogram --------------------------------------
+    stale = series.get("staleness", [])
+    if stale and max(stale) > 0:
+        vals, counts = np.unique(np.asarray(stale, np.int64),
+                                 return_counts=True)
+        lines += ["## Pipeline staleness (batch-writes behind)", "", "```"]
+        for v, c in zip(vals, counts):
+            lines.append(f"staleness {int(v):>3} | "
+                         f"{_bar(c / counts.max())} {int(c)}")
+        lines += ["```", ""]
+    return lines
+
+
+def render_overflow(epochs: list[dict]) -> list[str]:
+    total = sum(e.get("route_overflow", 0) for e in epochs)
+    shards = None
+    for e in epochs:
+        if "route_overflow_shards" in e:
+            per = np.asarray(e["route_overflow_shards"], np.int64)
+            shards = per if shards is None else shards + per
+    if not total and shards is None:
+        return []
+    lines = ["## Route overflow (budget-masked rows)", "",
+             f"Run total: {total}", ""]
+    if shards is not None:
+        lines += ["Per shard:", "```"]
+        top = max(int(shards.max()), 1)
+        for i, c in enumerate(shards):
+            lines.append(f"shard {i:>2} | {_bar(int(c) / top)} {int(c)}")
+        lines += ["```", ""]
+    return lines
+
+
+def render_gmm(epochs: list[dict]) -> list[str]:
+    rows = [dict(epoch=e["epoch"], **e["gmm_health"]) for e in epochs
+            if "gmm_health" in e]
+    if not rows:
+        return []
+    return (["## PRES GMM tracker health", ""]
+            + _table(rows, ["epoch", "tracked_fraction", "observations",
+                            "mean_abs_mu", "mean_var", "max_var"])
+            + [""])
+
+
+def _render_hist(name: str, hist: dict) -> list[str]:
+    counts = np.asarray(hist.get("counts", []), np.int64)
+    edges = hist.get("edges_ms", [])
+    if counts.sum() == 0:
+        return []
+    lines = [f"### {name} latency ({int(counts.sum())} samples)", "",
+             f"p50 ≤ {obs_metrics.hist_percentile(hist, 50):.3g} ms, "
+             f"p99 ≤ {obs_metrics.hist_percentile(hist, 99):.3g} ms "
+             f"(upper-edge estimates)", "", "```"]
+    nz = np.nonzero(counts)[0]
+    top = counts.max()
+    for i in range(nz[0], nz[-1] + 1):
+        lines.append(f"{edges[i]:>9.3g}–{edges[i + 1]:<9.3g} ms | "
+                     f"{_bar(counts[i] / top)} {int(counts[i])}")
+    return lines + ["```", ""]
+
+
+def render_serve(recs: list[dict]) -> list[str]:
+    lines: list[str] = []
+    for r in recs:
+        lines += ["## Serve replay", ""]
+        lines += _table([r], ["n_events", "n_queries", "n_ticks",
+                              "events_per_sec", "queries_per_sec",
+                              "online_ap"])
+        lines.append("")
+        lines += _render_hist("Ingest", r.get("ingest_hist", {}))
+        lines += _render_hist("Query", r.get("query_hist", {}))
+        traces = r.get("post_warmup_traces", {})
+        if traces:
+            lines += ["### Post-warmup jit traces (latency pollution!)", ""]
+            lines += [f"- `{k}`: {v}" for k, v in traces.items()] + [""]
+        else:
+            lines += ["No post-warmup jit traces: every live request ran "
+                      "pre-compiled.", ""]
+    return lines
+
+
+def render_spans(recs: list[dict]) -> list[str]:
+    lines: list[str] = []
+    for r in recs:
+        summ = r.get("summary", {})
+        if not summ:
+            continue
+        rows = [dict(span=k, **v) for k, v in
+                sorted(summ.items(), key=lambda kv: -kv[1]["total_s"])]
+        lines += (["## Host spans", ""]
+                  + _table(rows, ["span", "count", "total_s", "max_s"])
+                  + [""])
+    return lines
+
+
+def render_dispatch(recs: list[dict]) -> list[str]:
+    lines: list[str] = []
+    for r in recs:
+        table = r.get("table", {})
+        if not table:
+            continue
+        rows = [{"kernel": k, "mode": m, "dispatches": c}
+                for k, modes in sorted(table.items())
+                for m, c in sorted(modes.items())]
+        lines += (["## Kernel dispatch (execution-policy branches taken)", ""]
+                  + _table(rows, ["kernel", "mode", "dispatches"]) + [""])
+    return lines
+
+
+def render(records: list[dict]) -> str:
+    by_kind: dict = {}
+    for r in records:
+        by_kind.setdefault(r.get("kind"), []).append(r)
+    epochs = by_kind.get("epoch", [])
+    parts = render_manifest(by_kind["manifest"][0])
+    if epochs:
+        parts += render_epochs(epochs)
+        parts += render_series(epochs)
+        parts += render_overflow(epochs)
+        parts += render_gmm(epochs)
+    parts += render_serve(by_kind.get("serve", []))
+    parts += render_spans(by_kind.get("spans", []))
+    parts += render_dispatch(by_kind.get("kernel_dispatch", []))
+    return "\n".join(parts).rstrip() + "\n"
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0 if argv else 2
+    status = 0
+    for path in argv:
+        try:
+            records = sink.read_runlog(path)
+        except (OSError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            status = 1
+            continue
+        if len(argv) > 1:
+            print(f"\n===== {path} =====\n")
+        print(render(records))
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())
